@@ -1,0 +1,80 @@
+"""Paper Fig. 7: per-layer ARE of weight / activation / error on a (reduced)
+ResNet-20 forward/backward over synthetic CIFAR.
+
+"Error" is dL/dZ per block (captured exactly by differentiating w.r.t. a
+zero perturbation added to each block output), "activation" is each block's
+input, "weight" each block's conv1 kernel — the same three tensor kinds the
+paper quantizes.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    FMT_CIFAR, GroupSpec, average_relative_error, mls_quantize,
+)
+from repro.data import make_cifar_iterator
+from repro.models.cnn import CNNConfig, _RESNET_STAGES, _block, init_cnn
+from repro.models import nn
+
+
+def _forward_with_taps(params, x, cfg, zs):
+    depths, widths, _ = _RESNET_STAGES[cfg.arch]
+    h = nn.conv2d(params["stem"], x, 1, "SAME", None)
+    h = jax.nn.relu(nn.batchnorm(params["bn_stem"], h))
+    acts = []
+    bi = 0
+    for si, d in enumerate(depths):
+        for bj in range(d):
+            stride = 2 if (bj == 0 and si > 0) else 1
+            acts.append(h)
+            h = _block(params["blocks"][bi], h, stride, None, None, 0) + zs[bi]
+            bi += 1
+    h = jnp.mean(h, axis=(2, 3))
+    return nn.linear(params["fc"], h, None), acts
+
+
+def run(quick: bool = True):
+    cfg = CNNConfig(arch="resnet20", num_classes=10, width_mult=0.5, in_hw=16)
+    params = init_cnn(jax.random.key(0), cfg)
+    nxt, ds = make_cifar_iterator(batch=16, hw=16)
+    batch, _ = nxt(ds)
+
+    # shapes of each block output (for the zero perturbations)
+    zs0 = []
+    h = batch["image"]
+    depths, widths, _ = _RESNET_STAGES[cfg.arch]
+    widths = [cfg.scaled(w) for w in widths]
+    hw = cfg.in_hw
+    for si, d in enumerate(depths):
+        for bj in range(d):
+            if bj == 0 and si > 0:
+                hw //= 2
+            zs0.append(jnp.zeros((16, widths[si], hw, hw)))
+
+    def loss_fn(zs):
+        logits, _ = _forward_with_taps(params, batch["image"], cfg, zs)
+        ll = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(ll, batch["label"][:, None], 1).mean()
+
+    errors = jax.grad(loss_fn)(zs0)  # dL/dZ per block  (paper's "error")
+    _, acts = _forward_with_taps(params, batch["image"], cfg, zs0)
+    weights = [b["conv1"]["w"] for b in params["blocks"]]
+
+    t0 = time.perf_counter()
+    rows = []
+    for kind, tensors in (("weight", weights), ("act", acts), ("err", errors)):
+        for spec_name, spec in (("nc", GroupSpec.conv_nc()), ("none", None)):
+            ares = [
+                float(average_relative_error(
+                    x, mls_quantize(x, FMT_CIFAR, spec).dequant()))
+                for x in tensors
+            ]
+            mean = sum(ares) / len(ares)
+            rows.append((
+                f"fig7/{kind}_{spec_name}", 0.0,
+                f"mean_ARE={mean:.4f} layers={['%.3f' % a for a in ares[:6]]}",
+            ))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    return [(n, us, d) for n, _, d in rows]

@@ -1,0 +1,34 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU: correctness-grade
+timings, structural not wall-clock-representative of TPU)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FMT_IMAGENET, QuantConfig, lowbit_matmul
+from repro.kernels import lowbit_matmul_fused, mls_quantize_pallas
+
+
+def _time(f, *args, n=3):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick: bool = True):
+    m = 256
+    x = jax.random.normal(jax.random.key(0), (m, 512))
+    w = jax.random.normal(jax.random.key(1), (512, 256)) * 0.05
+    rows = []
+    us = _time(lambda a: mls_quantize_pallas(a, FMT_IMAGENET), x)
+    rows.append(("kernel/mls_quantize_pallas_256x512", us, "interpret-mode"))
+    us = _time(lambda a, b: lowbit_matmul_fused(a, b, None, fmt=FMT_IMAGENET), x, w)
+    rows.append(("kernel/lowbit_matmul_fused_256x512x256", us, "interpret-mode"))
+    cfg = QuantConfig(fmt=FMT_IMAGENET, stochastic=False)
+    us = _time(jax.jit(lambda a, b: lowbit_matmul(a, b, None, cfg)), x, w)
+    rows.append(("kernel/lowbit_matmul_fakequant_jit", us, "XLA-fused reference"))
+    us = _time(jax.jit(lambda a, b: a @ b), x, w)
+    rows.append(("kernel/fp32_matmul_jit", us, "baseline"))
+    return rows

@@ -1,0 +1,39 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline
+source).  Reads experiments/dryrun/*.json written by repro.launch.dryrun."""
+import glob
+import json
+import os
+import time
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(art_dir=None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir or ART_DIR, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_row(r):
+    rf = r["roofline"]
+    return (
+        f"compute={rf['compute_s']:.2e}s mem={rf['memory_s']:.2e}s "
+        f"coll={rf['collective_s']:.2e}s bound={rf['bottleneck']} "
+        f"frac={rf['roofline_fraction']:.3f} util={rf['model_flops_ratio']:.2f} "
+        f"mb={r.get('microbatch', 0)}"
+    )
+
+
+def run(quick: bool = True):
+    rows = []
+    for r in load_records():
+        name = f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("tag"):
+            name += f"_{r['tag']}"
+        rows.append((name, r.get("compile_s", 0) * 1e6, fmt_row(r)))
+    if not rows:
+        rows.append(("roofline/none", 0.0,
+                     "no artifacts; run python -m repro.launch.dryrun --all"))
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark driver: one module per paper table/figure + roofline + kernels.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract).  ``--full`` runs
+the longer training-proxy settings.
+"""
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    fig7_are,
+    kernel_bench,
+    roofline_report,
+    table1_opcounts,
+    table2_accuracy,
+    table4_ablation,
+    table5_energy,
+    table6_energy_network,
+)
+
+MODULES = [
+    ("table1", table1_opcounts),
+    ("table2", table2_accuracy),
+    ("table4", table4_ablation),
+    ("fig7", fig7_are),
+    ("table5", table5_energy),
+    ("table6", table6_energy_network),
+    ("roofline", roofline_report),
+    ("kernels", kernel_bench),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    ok = True
+    for name, mod in MODULES:
+        if args.only and args.only != name:
+            continue
+        try:
+            for row_name, us, derived in mod.run(quick=not args.full):
+                print(f'{row_name},{us:.1f},"{derived}"', flush=True)
+        except Exception:  # noqa: BLE001
+            ok = False
+            traceback.print_exc()
+            print(f'{name}/FAILED,0,"see stderr"', flush=True)
+    if not ok:
+        sys.exit(1)
+
+
+def run_all():
+    main()
+
+
+if __name__ == "__main__":
+    main()

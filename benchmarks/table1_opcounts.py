@@ -1,0 +1,28 @@
+"""Paper Table I: op counts of one ImageNet training step (per image)."""
+import time
+
+from repro.models.cnn import CNNConfig, count_ops
+
+PAPER = {  # (fwd conv MACs, fc MACs, ew-adds)
+    "resnet18": (1.88e9, 5.12e5, 7.53e5),
+    "googlenet": (1.58e9, 1.02e6, 0.0),
+}
+
+
+def run(quick: bool = True):
+    rows = []
+    for arch, (conv_ref, fc_ref, ew_ref) in PAPER.items():
+        t0 = time.perf_counter()
+        ops = count_ops(CNNConfig(arch=arch, num_classes=1000, in_hw=224))
+        us = (time.perf_counter() - t0) * 1e6
+        conv = sum(d["c_in"] * d["c_out"] * d["k"] ** 2 * d["h"] * d["w"]
+                   for k, d in ops if k == "conv")
+        fc = sum(d["d_in"] * d["d_out"] * d["rows"] for k, d in ops if k == "fc")
+        ew = sum(d["numel"] for k, d in ops if k == "ew_add")
+        rows.append((f"table1/{arch}_conv_macs", us,
+                     f"{conv:.3e} (paper {conv_ref:.2e})"))
+        rows.append((f"table1/{arch}_fc_macs", us,
+                     f"{fc:.3e} (paper {fc_ref:.2e})"))
+        rows.append((f"table1/{arch}_ew_adds", us,
+                     f"{ew:.3e} (paper {ew_ref:.2e})"))
+    return rows

@@ -1,0 +1,17 @@
+"""Paper Table V + Eq. 12: MAC-unit energies and the 3x3-conv energy ratio."""
+import time
+
+from repro.energy import MAC_ENERGY_PJ, conv_energy_ratio
+
+
+def run(quick: bool = True):
+    t0 = time.perf_counter()
+    rows = []
+    for fw, e in MAC_ENERGY_PJ.items():
+        rows.append((f"table5/{fw}", 0.0,
+                     f"mul={e['mul']}pJ acc={e['acc']}pJ"))
+    r = conv_energy_ratio(3)
+    rows.append(("table5/eq12_conv3x3_ratio", 0.0,
+                 f"{r:.2f}x (paper ~11.5x)"))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    return [(n, us, d) for n, _, d in rows]

@@ -1,0 +1,59 @@
+"""Batched serving demo: prefill a batch of prompts, then decode with the KV
+cache (MLS nearest-rounding quantized weights/activations at inference).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --tokens 32 --batch 4
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-72b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = lm.init_lm(jax.random.key(0), cfg)
+    max_len = args.prompt_len + args.tokens
+    prompts = jax.random.randint(
+        jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    print(f"serving reduced {cfg.name}: batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.tokens}")
+    t0 = time.perf_counter()
+    logits, cache = jax.jit(
+        lambda p, b: lm.prefill(p, b, cfg, max_len)
+    )(params, {"tokens": prompts})
+    print(f"prefill: {time.perf_counter()-t0:.2f}s "
+          f"({args.batch * args.prompt_len} tokens)")
+
+    decode = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, cfg),
+                     donate_argnums=(1,))
+    tok = jnp.argmax(logits, -1)[:, None]
+    out = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.tokens - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, -1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    n = args.batch * (args.tokens - 1)
+    print(f"decode: {dt:.2f}s -> {n/dt:.1f} tok/s (batch={args.batch})")
+    seqs = jnp.concatenate(out, axis=1)
+    print("sample generations (token ids):")
+    for row in seqs[:2]:
+        print("  ", row[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

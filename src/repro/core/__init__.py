@@ -1,0 +1,20 @@
+"""Core MLS low-bit numerics (the paper's primary contribution)."""
+from .formats import EMFormat, FMT_CIFAR, FMT_IMAGENET, GS_FMT_DEFAULT
+from .quantize import (
+    GroupSpec,
+    MLSTensor,
+    average_relative_error,
+    fake_quant,
+    fake_quant_ste,
+    mls_quantize,
+    pack_elements,
+    unpack_elements,
+)
+from .lowbit import QuantConfig, lowbit_conv, lowbit_matmul
+
+__all__ = [
+    "EMFormat", "FMT_CIFAR", "FMT_IMAGENET", "GS_FMT_DEFAULT",
+    "GroupSpec", "MLSTensor", "average_relative_error", "fake_quant",
+    "fake_quant_ste", "mls_quantize", "pack_elements", "unpack_elements",
+    "QuantConfig", "lowbit_conv", "lowbit_matmul",
+]

@@ -1,0 +1,249 @@
+"""Low-bit training ops (paper Alg. 1 / Sec. V-B).
+
+``lowbit_matmul`` / ``lowbit_conv`` quantize **both operands** to the MLS
+format on the forward pass and quantize the **back-propagated error** before
+the two backward GEMMs/convs, exactly as paper Alg. 1:
+
+    forward : Z  = Conv(qW, qA)                        (l.4)
+    backward: G  = Conv(qE, qA)      -> weight grad    (l.13)
+              dA = Conv(qE, qW), STE -> input grad     (l.15-16)
+
+Straight-through estimation means the gradient w.r.t. the *float* operands is
+the gradient w.r.t. their quantized versions.  Convolution/matmul outputs are
+full precision (the paper keeps BN & friends in fp32).
+
+Quantization is stochastic when a PRNG key is supplied (paper Eq. 5) and
+round-to-nearest when ``key`` is ``None``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import EMFormat, FMT_IMAGENET, GS_FMT_DEFAULT
+from .quantize import GroupSpec, fake_quant, mls_quantize
+
+__all__ = ["QuantConfig", "lowbit_matmul", "lowbit_conv", "quantize_operand"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """How a layer quantizes its three conv/matmul operands."""
+
+    fmt: EMFormat = FMT_IMAGENET  # <Ex,Mx> for W/A/E (paper uses one format)
+    gs_fmt: EMFormat = GS_FMT_DEFAULT  # <Eg,Mg> group-scale format
+    grouping: str = "nc"  # "nc" | "c" | "n" | "none"  (paper Table IV)
+    k_block: int = 128  # contraction block for matmul grouping (TPU tile)
+    stochastic: bool = True  # stochastic rounding (False -> nearest)
+    compute_dtype: jnp.dtype = jnp.float32  # dot dtype (bf16 on TPU is exact
+    # for MLS values when M <= 7 since products accumulate in fp32 on MXU)
+    enabled: bool = True
+    # Route the quantized WEIGHT through its packed uint8 representation with
+    # an FSDP sharding constraint on the codes: under FSDP, XLA then
+    # all-gathers 1-byte codes (+ tiny scales) instead of fp32/bf16 weights —
+    # the paper's wire format as a distributed-training compressor.
+    # Mathematically a no-op (pack/unpack is exact).
+    packed_wire: bool = False
+    # Which weight dim is FSDP-sharded (0 for in-projections, 1 for
+    # out-projections); None disables the wire pinning.  Set per-callsite by
+    # the layer code (nn.linear(..., wire=...)).
+    wire_fsdp_dim: Optional[int] = None
+    # Contraction axes of the GEMM weights are FSDP-sharded this many ways in
+    # the production mesh; scaling-group reshapes must align to the shard
+    # boundaries or XLA gathers the *unquantized* weight to form groups.
+    # 1 = no alignment (single-host tests); production configs set 16.
+    shard_ways: int = 1
+
+    def _aligned_kb(self, k: int) -> int:
+        if self.shard_ways > 1:
+            for kb in (self.k_block, 64, 32, 16):
+                if k % kb == 0 and (k // kb) % self.shard_ways == 0:
+                    return kb
+        return min(self.k_block, k)
+
+    def matmul_specs(self, x_shape, w_shape) -> Tuple[GroupSpec, GroupSpec]:
+        """Group specs for ``x @ w`` with x: (..., K), w: (K, N).
+
+        The matmul analogue of the paper's conv grouping: the contraction
+        axis plays the role of the input channel.  "nc" gives one scale per
+        (row, k-block) of x and per (k-block, column-block) of w.
+        """
+        kb = self._aligned_kb(x_shape[-1])
+        if self.grouping == "none":
+            return (GroupSpec.per_tensor(len(x_shape)), GroupSpec.per_tensor(2))
+        if self.grouping == "c":  # contraction blocks only
+            return (
+                GroupSpec((None,) * (len(x_shape) - 1) + (kb,)),
+                GroupSpec((kb, None)),
+            )
+        if self.grouping == "n":  # row/column only
+            return (
+                GroupSpec((1,) * (len(x_shape) - 1) + (None,)),
+                GroupSpec((None, kb)),
+            )
+        # "nc" (paper's best): activation per (row, k-block); weight per
+        # (k-block, output-channel) — the (Co, Ci) grouping of the paper.
+        return (
+            GroupSpec((1,) * (len(x_shape) - 1) + (kb,)),
+            GroupSpec((kb, 1)),
+        )
+
+    def conv_specs(self) -> Tuple[GroupSpec, GroupSpec]:
+        """Group specs for NCHW activations / OIHW weights (paper Sec. IV-B)."""
+        if self.grouping == "none":
+            return GroupSpec.per_tensor(4), GroupSpec.per_tensor(4)
+        if self.grouping == "c":
+            return GroupSpec((None, 1, None, None)), GroupSpec((None, 1, None, None))
+        if self.grouping == "n":
+            return GroupSpec((1, None, None, None)), GroupSpec((1, None, None, None))
+        return GroupSpec.conv_nc(), GroupSpec.conv_nc()
+
+
+def _maybe_key(key: Optional[jax.Array], cfg: QuantConfig, idx: int):
+    if key is None or not cfg.stochastic:
+        return None
+    return jax.random.fold_in(key, idx)
+
+
+def quantize_operand(x, cfg: QuantConfig, spec: GroupSpec, key, idx: int,
+                     wire: bool = False):
+    """Quantize -> (unit-scaled values in compute dtype, fp32 tensor scale).
+
+    The tensor-wise scale is factored out of the GEMM (paper Sec. V-B), so
+    the unit values have <= (Mg+1)+(Mx+1) mantissa bits and the bf16 cast is
+    exact for the paper's formats.
+
+    With ``wire=True`` and ``cfg.packed_wire`` the quantized weight is routed
+    through its packed uint8 codes with an FSDP sharding constraint, so the
+    FSDP all-gather moves 1 B/element instead of 4 B (exact round trip).
+    """
+    if not cfg.enabled:
+        return x.astype(cfg.compute_dtype), jnp.float32(1.0)
+    t = mls_quantize(x, cfg.fmt, spec, cfg.gs_fmt, _maybe_key(key, cfg, idx))
+    pin = wire and cfg.wire_fsdp_dim is not None and x.ndim == 2
+    if pin and cfg.packed_wire and t.fmt.element_bits <= 8:
+        from repro.parallel.sharding import wire_pin
+
+        from .quantize import broadcast_groups, pack_elements, unpack_elements
+
+        codes = wire_pin(pack_elements(t), cfg.wire_fsdp_dim)  # u8 gather
+        sign, mag = unpack_elements(codes, cfg.fmt)
+        # gather the group scales in COMPACT form (1/k_block of the element
+        # count) and broadcast locally — broadcasting first would gather a
+        # full-resolution f32 tensor and defeat the 1-byte wire format.
+        sg_dim = min(cfg.wire_fsdp_dim, t.s_g.ndim - 1)
+        sgc = wire_pin(t.s_g, sg_dim)
+        sg = broadcast_groups(sgc, t.spec, x.shape)
+        unit = (sign * mag * sg).astype(cfg.compute_dtype)
+        return unit, t.s_t
+    unit = t.unit_value().astype(cfg.compute_dtype)
+    if pin:
+        from repro.parallel.sharding import wire_pin
+
+        unit = wire_pin(unit, cfg.wire_fsdp_dim)  # bf16 gather
+    return unit, t.s_t
+
+
+# ---------------------------------------------------------------------------
+# Low-bit matmul
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def lowbit_matmul(x, w, key, cfg: QuantConfig):
+    """``x @ w`` with MLS-quantized operands; x: (..., K), w: (K, N)."""
+    y, _ = _lm_fwd(x, w, key, cfg)
+    return y
+
+
+def _lm_fwd(x, w, key, cfg: QuantConfig):
+    sx, sw = cfg.matmul_specs(x.shape, w.shape)
+    qx, stx = quantize_operand(x, cfg, sx, key, 0)
+    qw, stw = quantize_operand(w, cfg, sw, key, 1, wire=True)
+    y = jax.lax.dot_general(
+        qx, qw,
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * (stx * stw)
+    protos = (jnp.zeros((), x.dtype), jnp.zeros((), w.dtype))
+    return y, (qx, stx, qw, stw, key, protos)
+
+
+def _lm_bwd(cfg: QuantConfig, res, g):
+    qx, stx, qw, stw, key, (xp, wp) = res
+    # quantize the error once (paper Alg. 1 l.12), reuse for both grads
+    ge = g.astype(jnp.float32)
+    if cfg.enabled:
+        se = GroupSpec(
+            (1,) * (ge.ndim - 1) + (min(cfg.k_block, ge.shape[-1]),)
+            if cfg.grouping in ("nc", "c")
+            else (None,) * ge.ndim
+        )
+        te = mls_quantize(ge, cfg.fmt, se, cfg.gs_fmt, _maybe_key(key, cfg, 2))
+        ge, ste = te.unit_value().astype(cfg.compute_dtype), te.s_t
+    else:
+        ge, ste = ge.astype(cfg.compute_dtype), jnp.float32(1.0)
+    # dX = qE @ qW^T   (paper l.15: LowbitConv(qE, qW))
+    dx = jax.lax.dot_general(
+        ge, qw, (((ge.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * (ste * stw)
+    # dW = qX^T @ qE   (paper l.13: G = LowbitConv(qE, qA))
+    batch_axes = tuple(range(ge.ndim - 1))
+    dw = jax.lax.dot_general(
+        qx, ge, ((batch_axes, batch_axes), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * (ste * stx)
+    return dx.astype(xp.dtype), dw.astype(wp.dtype), None
+
+
+lowbit_matmul.defvjp(_lm_fwd, _lm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Low-bit convolution (NCHW / OIHW)
+# ---------------------------------------------------------------------------
+def _conv(x, w, stride, padding):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=stride, padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def lowbit_conv(x, w, key, stride, padding, cfg: QuantConfig):
+    """NCHW conv with MLS-quantized W/A/E (paper Alg. 1)."""
+    y, _ = _lc_fwd(x, w, key, stride, padding, cfg)
+    return y
+
+
+def _lc_fwd(x, w, key, stride, padding, cfg: QuantConfig):
+    sa, sw = cfg.conv_specs()
+    qx, stx = quantize_operand(x, cfg, sa, key, 0)
+    qw, stw = quantize_operand(w, cfg, sw, key, 1)
+    y = _conv(qx, qw, stride, padding) * (stx * stw)
+    protos = (jnp.zeros((), x.dtype), jnp.zeros((), w.dtype))
+    return y, (qx, stx, qw, stw, key, protos)
+
+
+def _lc_bwd(stride, padding, cfg: QuantConfig, res, g):
+    qx, stx, qw, stw, key, (xp, wp) = res
+    ge = g.astype(jnp.float32)
+    if cfg.enabled:
+        se, _ = cfg.conv_specs()  # error grouped by (n, co) like activations
+        te = mls_quantize(ge, cfg.fmt, se, cfg.gs_fmt, _maybe_key(key, cfg, 2))
+        ge, ste = te.unit_value(), te.s_t
+    else:
+        ste = jnp.float32(1.0)
+    # transpose convs via the vjp of the clean conv evaluated at (qx, qw)
+    _, vjp = jax.vjp(lambda a, b: _conv(a, b, stride, padding), qx, qw)
+    dx, dw = vjp(ge.astype(cfg.compute_dtype).astype(jnp.float32))
+    dx = dx.astype(jnp.float32) * (ste * stw)
+    dw = dw.astype(jnp.float32) * (ste * stx)
+    return dx.astype(xp.dtype), dw.astype(wp.dtype), None
+
+
+lowbit_conv.defvjp(_lc_fwd, _lc_bwd)

@@ -1,0 +1,12 @@
+from .synthetic import (
+    DataState,
+    cifar_like_batch,
+    lm_batch,
+    make_cifar_iterator,
+    make_lm_iterator,
+)
+
+__all__ = [
+    "DataState", "cifar_like_batch", "lm_batch", "make_cifar_iterator",
+    "make_lm_iterator",
+]

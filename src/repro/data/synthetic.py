@@ -1,0 +1,113 @@
+"""Deterministic synthetic data pipelines.
+
+The container is offline, so datasets are procedural but *learnable* —
+convergence experiments need structure, not noise:
+
+* ``cifar_like``: class-conditional Gabor-ish patterns + noise; a CNN can
+  reach high accuracy, and quantization-induced degradation is measurable
+  (used by the paper-reproduction benchmarks and examples).
+* ``lm``: order-2 Markov token streams with a class-dependent transition
+  matrix; cross-entropy drops well below uniform when the model learns.
+
+Iterators are **stateful pytrees** (``DataState``): the current step and RNG
+key live in the checkpoint, so restarts resume the exact data stream
+(fault-tolerance requirement, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DataState:
+    step: jax.Array  # int32
+    key: jax.Array
+
+    def tree_flatten(self):
+        return (self.step, self.key), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @staticmethod
+    def init(seed: int = 0) -> "DataState":
+        return DataState(jnp.int32(0), jax.random.key(seed))
+
+
+# ---------------------------------------------------------------------------
+# CIFAR-like images
+# ---------------------------------------------------------------------------
+def _class_pattern(num_classes: int, hw: int) -> jax.Array:
+    """(C, 3, hw, hw) fixed per-class spatial frequency patterns."""
+    ys, xs = jnp.mgrid[0:hw, 0:hw] / hw
+    cls = jnp.arange(num_classes)
+    fx = 1.0 + (cls % 5).astype(jnp.float32)
+    fy = 1.0 + (cls // 5 % 5).astype(jnp.float32)
+    phase = cls.astype(jnp.float32) * 0.7
+    pat = jnp.sin(
+        2 * jnp.pi * (fx[:, None, None] * xs + fy[:, None, None] * ys)
+        + phase[:, None, None]
+    )
+    chan = jnp.stack([pat, jnp.roll(pat, hw // 4, axis=-1), -pat], axis=1)
+    return chan  # (C, 3, hw, hw)
+
+
+def cifar_like_batch(key, batch: int, hw: int = 32, num_classes: int = 10,
+                     noise: float = 0.6) -> Dict[str, jax.Array]:
+    kl, kn = jax.random.split(key)
+    labels = jax.random.randint(kl, (batch,), 0, num_classes)
+    pats = _class_pattern(num_classes, hw)
+    x = pats[labels] + noise * jax.random.normal(kn, (batch, 3, hw, hw))
+    return {"image": x.astype(jnp.float32), "label": labels}
+
+
+def make_cifar_iterator(batch: int, hw: int = 32, num_classes: int = 10,
+                        seed: int = 0):
+    @jax.jit
+    def next_batch(state: DataState):
+        key = jax.random.fold_in(state.key, state.step)
+        b = cifar_like_batch(key, batch, hw, num_classes)
+        return b, DataState(state.step + 1, state.key)
+
+    return next_batch, DataState.init(seed)
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+def lm_batch(key, batch: int, seq: int, vocab: int) -> Dict[str, jax.Array]:
+    """Order-1 Markov stream over a banded transition structure: token t+1 is
+    (t * 31 + r) % vocab with r drawn from a small set — learnable by any LM."""
+    k1, k2 = jax.random.split(key)
+    start = jax.random.randint(k1, (batch, 1), 0, vocab)
+    steps = jax.random.randint(k2, (batch, seq - 1), 0, 4)  # small branching
+
+    def scan_fn(tok, r):
+        nxt = (tok * 31 + r + 7) % vocab
+        return nxt, nxt
+
+    _, rest = jax.lax.scan(scan_fn, start[:, 0], steps.T)
+    toks = jnp.concatenate([start, rest.T], axis=1)
+    return {"tokens": toks.astype(jnp.int32)}
+
+
+def make_lm_iterator(batch: int, seq: int, vocab: int, seed: int = 0,
+                     extras: Tuple[Tuple[str, tuple], ...] = ()):
+    """``extras``: ((name, shape), ...) additional float inputs (frontend
+    embeddings for the vlm/audio stubs)."""
+
+    @jax.jit
+    def next_batch(state: DataState):
+        key = jax.random.fold_in(state.key, state.step)
+        b = lm_batch(key, batch, seq, vocab)
+        for i, (name, shape) in enumerate(extras):
+            b[name] = jax.random.normal(jax.random.fold_in(key, 100 + i), shape)
+        return b, DataState(state.step + 1, state.key)
+
+    return next_batch, DataState.init(seed)

@@ -1,0 +1,9 @@
+from .model import (
+    MAC_ENERGY_PJ,
+    conv_energy_ratio,
+    efficiency_ratios,
+    network_energy,
+)
+
+__all__ = ["MAC_ENERGY_PJ", "conv_energy_ratio", "efficiency_ratios",
+           "network_energy"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the MLS low-bit hot loops.
+
+* ``mls_quantize`` — fused dynamic quantization (paper Alg. 2)
+* ``mls_matmul``   — quantized-domain GEMM with exact intra-group integer
+  accumulation and shift-add inter-group scaling (paper Eq. 6-8)
+* ``ops``          — jit'd public wrappers
+* ``ref``          — pure-jnp oracles used by the test suite
+"""
+from .mls_quantize import mls_quantize_pallas
+from .mls_matmul import mls_matmul_pallas
+from .ops import lowbit_matmul_fused
+
+__all__ = ["mls_quantize_pallas", "mls_matmul_pallas", "lowbit_matmul_fused"]

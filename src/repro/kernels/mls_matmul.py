@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: low-bit tensor GEMM in the MLS quantized domain.
+
+Implements the paper's low-bit convolution arithmetic (Sec. V-B, Eq. 6-8)
+adapted to TPU as a tiled matmul:
+
+* **Intra-group MACs** (Eq. 7): packed uint8 codes are decoded to signed
+  integer fractions ``F`` (``|F| < 2^(M + 2^E - 1)``) and contracted over one
+  ``k_block``-wide scaling group with an MXU ``dot``.  Products are at most
+  ``2M + 2^(E+1) - 2`` bits (14 for the paper's ImageNet format ⟨2,4⟩), so
+  fp32 accumulation over a 128-deep group is **bit-exact integer
+  arithmetic** — the TPU-native analogue of the paper's int accumulator
+  (fp32 is exact below 2^24; 14-bit products x 128 depth = 21 bits).
+* **Inter-group combine** (Eq. 8): the partial sum of each group is scaled
+  by ``S_p = s_g^x * s_g^w`` — a ⟨Eg,2⟩ value, i.e. a sum of <= 3 shifted
+  copies in the paper's adder tree; here an exact fp32 multiply — and
+  accumulated across groups in the fp32 output tile (the "TreeAdd" level).
+* The tensor scales ``s_t^x * s_t^w`` multiply the output tile once
+  (paper Sec. V-B: tensor-wise scale folded out of the MAC array).
+
+Grid: ``(M/bm, N/bn, K/bk)`` with the contraction innermost; ``bk`` equals
+the scaling-group width so group boundaries coincide with VMEM tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import EMFormat
+
+
+def _decode_frac(codes, fmt: EMFormat):
+    """uint8 codes -> signed integer fractions as exact fp32 values."""
+    c = codes.astype(jnp.int32)
+    man = c & (2**fmt.m - 1)
+    exp = (c >> fmt.m) & (2**fmt.e - 1)
+    sign_bit = c >> (fmt.e + fmt.m)
+    top = 2**fmt.e - 1
+    is_denorm = exp == 0
+    base = jnp.where(is_denorm, man, 2**fmt.m + man)
+    shift = jnp.where(is_denorm, 0, top - exp)
+    f = (base << shift).astype(jnp.float32)
+    return jnp.where(sign_bit == 1, -f, f)
+
+
+def _kernel(
+    xc_ref, xsg_ref, wc_ref, wsg_ref, st_ref, out_ref, acc_ref, *, fmt, n_k
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    fx = _decode_frac(xc_ref[...], fmt)  # (bm, bk) exact small ints
+    fw = _decode_frac(wc_ref[...], fmt)  # (bk, bn)
+    # Intra-group integer MACs on the MXU (exact in fp32, see module doc).
+    p = jnp.dot(fx, fw, preferred_element_type=jnp.float32)  # (bm, bn)
+    # Inter-group scale S_p = s_g^x ⊗ s_g^w (shift-add in HW, exact here).
+    sp = xsg_ref[:, 0][:, None] * wsg_ref[0, :][None, :]
+    acc_ref[...] += p * sp
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        unit = 2.0 ** (2 * (fmt.e_min - fmt.m))
+        out_ref[...] = acc_ref[...] * (st_ref[0, 0] * unit)
+
+
+def mls_matmul_pallas(
+    x_codes: jax.Array,
+    x_sg: jax.Array,
+    x_st: jax.Array,
+    w_codes: jax.Array,
+    w_sg: jax.Array,
+    w_st: jax.Array,
+    fmt: EMFormat,
+    k_block: int = 128,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantized-domain GEMM: x (M, K) @ w (K, N) -> fp32 (M, N).
+
+    ``x_sg``: (M, K/k_block) group scales; ``w_sg``: (K/k_block, N).
+    """
+    M, K = x_codes.shape
+    K2, N = w_codes.shape
+    assert K == K2 and K % k_block == 0
+    nkb = K // k_block
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    assert M % block_m == 0 and N % block_n == 0
+    st = (x_st * w_st).astype(jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_kernel, fmt=fmt, n_k=nkb)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // block_m, N // block_n, nkb),
+        in_specs=[
+            pl.BlockSpec((block_m, k_block), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_m, 1), lambda i, j, k: (i, k)),
+            pl.BlockSpec((k_block, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x_codes, x_sg, w_codes, w_sg, st)

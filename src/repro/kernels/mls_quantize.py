@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: fused MLS dynamic quantization (paper Alg. 2).
+
+One pass over the operand computes group maxima, the hardware-friendly
+``<Eg,Mg>`` group scales (ceil-rounded), and the packed ``<Ex,Mx>`` element
+codes with stochastic rounding — writing **1 byte per element** plus one
+scale per ``k_block`` elements back to HBM (vs 4 bytes for the fp32 input):
+the memory-traffic reduction that makes dynamic quantization cheap on TPU.
+
+The tensor-wise scale ``s_t`` is a global reduction and is computed ahead of
+the kernel (a cheap fused max-reduce); it enters the kernel via SMEM.
+
+Grid: one program per ``block_m`` rows; each program statically loops over
+the ``K // k_block`` scaling groups of its rows, keeping the whole row block
+in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import EMFormat, GS_FMT_DEFAULT
+
+DEFAULT_BLOCK_M = 256
+
+
+def _exponent_fraction(x):
+    """Bit-exact Exponent/Fraction on fp32 (kernel-local copy)."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    raw_exp = (bits >> 23) & 0xFF
+    man_bits = bits & 0x7FFFFF
+    bad = raw_exp == 0  # zero / fp32-subnormal -> treat as zero
+    e = jnp.where(bad, jnp.int32(-(2**30)), raw_exp - 127)
+    frac = jax.lax.bitcast_convert_type(man_bits | (127 << 23), jnp.int32)
+    frac = jnp.where(bad, 0.0, jax.lax.bitcast_convert_type(frac, jnp.float32))
+    return e, frac
+
+
+def _quantize_block(x, r_u8, s_t, fmt: EMFormat, gs_fmt: EMFormat):
+    """Quantize one (block_m, k_block) group column. Returns (codes, s_g)."""
+    absx = jnp.abs(x)
+    sign_bit = (x < 0).astype(jnp.int32)
+
+    # ---- group scale (one per row of the block), Alg. 2 l.2-8 ------------
+    s_r = jnp.max(absx, axis=1, keepdims=True)  # (bm, 1)
+    s_gf = s_r / s_t
+    eg_min = max(gs_fmt.e_min, -120)
+    e_g, frac_g = _exponent_fraction(s_gf)
+    too_small = e_g < eg_min
+    e_g = jnp.clip(e_g, eg_min, 0)
+    frac_g = jnp.where(too_small, 1.0, frac_g)
+    man_g = jnp.ceil((frac_g - 1.0) * 2.0**gs_fmt.m)
+    overflow = man_g >= 2**gs_fmt.m
+    man_g = jnp.where(overflow, 0.0, man_g)
+    e_g = jnp.clip(jnp.where(overflow, e_g + 1, e_g), eg_min, 0)
+    s_g = (1.0 + man_g * 2.0**-gs_fmt.m) * jnp.exp2(e_g.astype(jnp.float32))
+
+    # ---- elements, Alg. 2 l.9-16 ------------------------------------------
+    denom = s_t * s_g
+    x_f = jnp.where(denom > 0, absx / jnp.where(denom > 0, denom, 1.0), 0.0)
+    e_x, _ = _exponent_fraction(x_f)
+    e_eff = jnp.clip(e_x, fmt.e_min, -1)
+    step = jnp.exp2((e_eff - fmt.m).astype(jnp.float32))
+    r = (r_u8.astype(jnp.float32) + 0.5) / 256.0 - 0.5
+    q = jnp.floor(x_f / step + r + 0.5)
+    qmax = jnp.where(e_eff == -1, 2.0 ** (fmt.m + 1) - 1.0, 2.0 ** (fmt.m + 1))
+    q = jnp.clip(q, 0.0, qmax)
+    xbar = q * step
+
+    e2, frac2 = _exponent_fraction(xbar)
+    is_normal = e2 >= fmt.e_min
+    man = jnp.where(
+        is_normal,
+        jnp.floor((frac2 - 1.0) * 2.0**fmt.m + 0.5),
+        jnp.floor(xbar * 2.0 ** (fmt.m - fmt.e_min) + 0.5),
+    ).astype(jnp.int32)
+    exp_stored = jnp.where(is_normal, -e2, 0)
+    codes = (
+        (sign_bit << (fmt.e + fmt.m)) | (exp_stored << fmt.m) | man
+    ).astype(jnp.uint8)
+    return codes, s_g[:, 0]
+
+
+def _kernel(x_ref, r_ref, st_ref, codes_ref, sg_ref, *, fmt, gs_fmt, k_block):
+    s_t = st_ref[0, 0]
+    n_groups = x_ref.shape[1] // k_block
+    for g in range(n_groups):  # static loop over scaling groups
+        sl = pl.dslice(g * k_block, k_block)
+        codes, s_g = _quantize_block(
+            x_ref[:, sl], r_ref[:, sl], s_t, fmt, gs_fmt
+        )
+        codes_ref[:, sl] = codes
+        sg_ref[:, pl.dslice(g, 1)] = s_g[:, None]
+
+
+def mls_quantize_pallas(
+    x: jax.Array,
+    fmt: EMFormat,
+    k_block: int = 128,
+    gs_fmt: EMFormat = GS_FMT_DEFAULT,
+    key: Optional[jax.Array] = None,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = True,
+):
+    """Quantize a 2-D ``(M, K)`` operand to packed MLS codes.
+
+    Returns ``(codes uint8 (M, K), s_g f32 (M, K/k_block), s_t f32 scalar)``.
+    """
+    M, K = x.shape
+    assert K % k_block == 0, (K, k_block)
+    block_m = min(block_m, M)
+    assert M % block_m == 0, (M, block_m)
+    x = x.astype(jnp.float32)
+    s_t = jnp.max(jnp.abs(x))
+    s_t = jnp.where(s_t > 0, s_t, 1.0).reshape(1, 1)
+    if key is not None:
+        r_u8 = jax.random.randint(key, x.shape, 0, 256, dtype=jnp.int32).astype(
+            jnp.uint8
+        )
+    else:
+        r_u8 = jnp.full(x.shape, 127, dtype=jnp.uint8)  # r = -0.002 ~ nearest
+    nkb = K // k_block
+    kernel = functools.partial(_kernel, fmt=fmt, gs_fmt=gs_fmt, k_block=k_block)
+    codes, s_g = pl.pallas_call(
+        kernel,
+        grid=(M // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, nkb), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), jnp.uint8),
+            jax.ShapeDtypeStruct((M, nkb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, r_u8, s_t)
+    return codes, s_g, s_t[0, 0]

@@ -1,0 +1,69 @@
+"""Public jit'd wrappers around the Pallas MLS kernels.
+
+``lowbit_matmul_fused`` is the end-to-end quantized GEMM: both float
+operands are dynamically quantized by the Pallas quantization kernel and
+contracted by the quantized-domain Pallas GEMM.  On CPU the kernels run in
+interpret mode (bit-exact semantics); on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import EMFormat, GS_FMT_DEFAULT
+from .mls_matmul import mls_matmul_pallas
+from .mls_quantize import mls_quantize_pallas
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@partial(
+    jax.jit,
+    static_argnames=("fmt", "gs_fmt", "k_block", "block_m", "block_n", "interpret"),
+)
+def lowbit_matmul_fused(
+    x: jax.Array,
+    w: jax.Array,
+    key: Optional[jax.Array] = None,
+    *,
+    fmt: EMFormat,
+    gs_fmt: EMFormat = GS_FMT_DEFAULT,
+    k_block: int = 128,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Dynamically quantize ``x (M,K)`` and ``w (K,N)`` and multiply.
+
+    Shapes are padded to tile multiples internally; the result is fp32
+    ``(M, N)`` and is bit-identical to the pure-jnp oracle pipeline
+    (``kernels.ref.quantize_ref`` + ``kernels.ref.mls_matmul_ref``).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    xp = _pad_to(x.astype(jnp.float32), block_m, k_block)
+    wp = _pad_to(w.astype(jnp.float32), k_block, block_n)
+    kx, kw = (None, None) if key is None else tuple(jax.random.split(key))
+    xc, xsg, xst = mls_quantize_pallas(
+        xp, fmt, k_block, gs_fmt, kx, block_m=block_m, interpret=interpret
+    )
+    wc, wsgT, wst = mls_quantize_pallas(
+        wp.T, fmt, k_block, gs_fmt, kw, block_m=block_n, interpret=interpret
+    )
+    # weight was quantized transposed (groups per (column, k-block)); the
+    # GEMM kernel wants codes (K, N) and scales (K/kb, N)
+    y = mls_matmul_pallas(
+        xc, xsg, xst, wc.T, wsgT.T, wst, fmt,
+        k_block=k_block, block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    return y[:M, :N]

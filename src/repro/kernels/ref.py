@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These mirror the kernels' *quantized-domain* semantics exactly (integer
+fractions, group scales, tensor scale factored out), so kernel-vs-ref tests
+can assert bit-identical results, and they are cross-checked against the
+float `repro.core` implementation in the test suite.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import EMFormat, GS_FMT_DEFAULT
+from repro.core.quantize import (
+    GroupSpec,
+    mls_quantize,
+    pack_elements,
+    unpack_elements,
+)
+
+
+def quantize_ref(
+    x: jax.Array,
+    fmt: EMFormat,
+    k_block: int,
+    gs_fmt: EMFormat = GS_FMT_DEFAULT,
+    r_u8: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference dynamic quantization of a 2-D operand ``(M, K)``.
+
+    Groups are ``(row, k-block)``.  ``r_u8`` is the uint8 stochastic-rounding
+    source the kernel consumes (``None`` -> round-to-nearest).  Returns
+    ``(codes_u8, s_g_f32, s_t_f32_scalar)`` with ``codes`` the packed
+    sign/exp/man elements and ``s_g`` of shape ``(M, K // k_block)``.
+    """
+    assert x.ndim == 2 and x.shape[1] % k_block == 0
+    key = None
+    if r_u8 is not None:
+        # mirror the kernel: u = (r + 0.5)/256 - 0.5 in (-0.5, 0.5)
+        r = (r_u8.astype(jnp.float32) + 0.5) / 256.0 - 0.5
+    else:
+        r = None
+    spec = GroupSpec((1, k_block))
+    # re-implement mls_quantize but with the supplied rounding tensor
+    from repro.core.quantize import (
+        broadcast_groups,
+        group_reduce_max,
+        quantize_elements,
+        quantize_group_scale,
+    )
+
+    xf32 = x.astype(jnp.float32)
+    sign = jnp.sign(xf32).astype(jnp.int8)
+    absx = jnp.abs(xf32)
+    s_r = group_reduce_max(absx, spec)
+    s_t = jnp.max(s_r)
+    s_t = jnp.where(s_t > 0, s_t, 1.0)
+    s_g, _, _ = quantize_group_scale(s_r / s_t, gs_fmt)
+    denom = s_t * broadcast_groups(s_g, spec, x.shape)
+    x_f = jnp.where(denom > 0, absx / jnp.where(denom > 0, denom, 1.0), 0.0)
+    xbar, exp_x, man_x = quantize_elements(x_f, fmt, r)
+    sign_bit = (sign.astype(jnp.int32) < 0).astype(jnp.int32)
+    codes = ((sign_bit << (fmt.e + fmt.m)) | (exp_x << fmt.m) | man_x).astype(
+        jnp.uint8
+    )
+    return codes, s_g, s_t
+
+
+def decode_frac_int(codes: jax.Array, fmt: EMFormat) -> jax.Array:
+    """uint8 codes -> signed integer fractions F (paper Eq. 7 operands).
+
+    ``|value| = |F| * 2^(e_min - M)``; F fits in ``M + 2^E - 1`` magnitude
+    bits plus sign.
+    """
+    c = codes.astype(jnp.int32)
+    man = c & (2**fmt.m - 1)
+    exp = (c >> fmt.m) & (2**fmt.e - 1)
+    sign_bit = c >> (fmt.e + fmt.m)
+    top = 2**fmt.e - 1
+    is_denorm = exp == 0
+    base = jnp.where(is_denorm, man, 2**fmt.m + man)
+    shift = jnp.where(is_denorm, 0, top - exp)
+    f = base << shift
+    return jnp.where(sign_bit == 1, -f, f)
+
+
+def mls_matmul_ref(
+    x_codes: jax.Array,
+    x_sg: jax.Array,
+    x_st: jax.Array,
+    w_codes: jax.Array,
+    w_sg: jax.Array,
+    w_st: jax.Array,
+    fmt: EMFormat,
+    k_block: int,
+) -> jax.Array:
+    """Quantized-domain GEMM oracle (paper Eq. 6-8).
+
+    x: (M, K) codes with s_g (M, K/kb);  w: (K, N) codes with s_g (K/kb, N).
+    Intra-group: integer MAC over each k-block (exact in fp32).
+    Inter-group: group-scale product (a shift-add in hardware, exact fp32
+    multiply here) then fp32 accumulation — the paper's adder tree.
+    """
+    M, K = x_codes.shape
+    K2, N = w_codes.shape
+    assert K == K2 and K % k_block == 0
+    nkb = K // k_block
+    fx = decode_frac_int(x_codes, fmt).astype(jnp.float32)  # exact small ints
+    fw = decode_frac_int(w_codes, fmt).astype(jnp.float32)
+    fx = fx.reshape(M, nkb, k_block)
+    fw = fw.reshape(nkb, k_block, N)
+    # intra-group integer MACs: P[m, g, n]
+    p = jnp.einsum("mgk,gkn->gmn", fx, fw)
+    # inter-group: scale by S_p = s_g^x * s_g^w and accumulate
+    sp = x_sg.T[:, :, None] * w_sg[:, None, :]  # (g, M, N)
+    z = jnp.sum(p * sp, axis=0)
+    unit = 2.0 ** (2 * (fmt.e_min - fmt.m))
+    return z * (x_st * w_st * unit)

@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod AOT dry-run: ``.lower().compile()`` every (arch x shape x
+mesh) cell on the production meshes, zero real allocation (ShapeDtypeStructs).
+
+For each cell this records into a JSON artifact (experiments/dryrun/):
+* ``memory_analysis`` — per-device argument/output/temp bytes (fit proof),
+* ``cost_analysis``   — raw XLA FLOPs/bytes (while-body counted once; see
+  hlo_analysis for the trip-corrected numbers),
+* ``hlo``             — trip-corrected dot FLOPs + per-collective wire bytes,
+* roofline terms (compute / memory / collective seconds) and the dominant
+  bottleneck, using the TPU v5e-class constants from the brief.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCHS,
+    SHAPES,
+    RunConfig,
+    get_config,
+    runnable_shapes,
+    shape_model_config,
+)
+from repro.launch import roofline as rf
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    abstract_params,
+    batch_specs,
+    cache_specs,
+    choose_microbatch,
+)
+from repro.parallel import DEFAULT_RULES, axis_rules
+from repro.parallel.specs import batch_shardings, cache_shardings, param_shardings
+from repro.train import make_serve_step, make_train_step
+from repro.parallel.sharding import AxisRules
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    rules: Optional[AxisRules] = None,
+    microbatch: Optional[int] = None,
+    tag: str = "",
+    out_dir: Optional[str] = None,
+    verbose: bool = True,
+    cfg_updates: Optional[Dict[str, Any]] = None,
+    seq_shard: bool = False,
+) -> Dict[str, Any]:
+    """Lower + compile one cell; returns (and persists) the analysis record.
+
+    ``cfg_updates``: ModelConfig field overrides (perf-iteration levers).
+    ``seq_shard``: bind the sequence-parallel rules variant.
+    """
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if seq_shard and rules is None:
+        from repro.parallel.sharding import SP_RULES
+
+        rules = SP_RULES
+    rules = rules or DEFAULT_RULES
+    cfg = shape_model_config(get_config(arch), SHAPES[shape_name])
+    if cfg_updates:
+        cfg = dataclasses.replace(cfg, **cfg_updates)
+    shape = SHAPES[shape_name]
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.devices.size, "tag": tag,
+    }
+
+    with mesh, axis_rules(rules, mesh):
+        params = abstract_params(cfg)
+        p_shard = param_shardings(params, mesh, rules)
+        if shape.kind == "train":
+            mb = choose_microbatch(cfg, shape, mesh, seq_shard) \
+                if microbatch is None else microbatch
+            record["microbatch"] = mb
+            run = RunConfig(model=cfg, shape=shape, microbatch=mb)
+            train_step, opt_init = make_train_step(run)
+            opt = jax.eval_shape(opt_init, params)
+            o_shard = _opt_shardings(opt, params, p_shard, mesh)
+            batch = batch_specs(cfg, shape)
+            b_shard = batch_shardings(batch, mesh, rules)
+            step = jax.jit(
+                train_step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = step.lower(params, opt, batch)
+        else:
+            serve_step = make_serve_step(cfg)
+            if shape.kind == "prefill":
+                from repro.train import make_prefill_step
+
+                pf = make_prefill_step(cfg, max_len=shape.seq_len)
+                batch = batch_specs(cfg, shape)
+                b_shard = batch_shardings(batch, mesh, rules)
+                step = jax.jit(pf, in_shardings=(p_shard, b_shard))
+                lowered = step.lower(params, batch)
+            else:  # decode
+                cache = cache_specs(cfg, shape)
+                c_shard = cache_shardings(cache, mesh, rules)
+                batch = batch_specs(cfg, shape)
+                b_shard = batch_shardings(batch, mesh, rules)
+                step = jax.jit(
+                    serve_step,
+                    in_shardings=(p_shard, c_shard, b_shard["tokens"]),
+                    out_shardings=(None, c_shard),
+                    donate_argnums=(1,),
+                )
+                lowered = step.lower(params, cache, batch["tokens"])
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    record["memory_analysis"] = {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+        "output_bytes": getattr(ma, "output_size_in_bytes", None),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+    }
+    ca = compiled.cost_analysis() or {}
+    record["cost_analysis"] = {
+        "flops_raw": float(ca.get("flops", 0.0)),
+        "bytes_accessed_raw": float(ca.get("bytes accessed", 0.0)),
+    }
+    hlo_text = compiled.as_text()
+    record["hlo"] = analyze_hlo(hlo_text)
+    record["hlo_chars"] = len(hlo_text)
+    record["lower_s"] = round(t1 - t0, 2)
+    record["compile_s"] = round(t2 - t1, 2)
+    record["roofline"] = rf.roofline_terms(cfg, shape, mesh, record)
+
+    if verbose:
+        r = record["roofline"]
+        print(
+            f"[dryrun] {arch} x {shape_name} x {record['mesh']}{tag}: "
+            f"compile {record['compile_s']}s, "
+            f"compute {r['compute_s']:.2e}s mem {r['memory_s']:.2e}s "
+            f"coll {r['collective_s']:.2e}s -> {r['bottleneck']} "
+            f"(roofline frac {r['roofline_fraction']:.2f}, "
+            f"util {r['model_flops_ratio']:.2f})",
+            flush=True,
+        )
+    out_dir = out_dir or OUT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}_{shape_name}_{record['mesh']}{('_' + tag) if tag else ''}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def _opt_shardings(opt, params, p_shard, mesh):
+    """Optimizer state mirrors parameter shardings; scalars replicate."""
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    def mirror(tree):
+        # mu/nu have the same tree structure as params
+        return jax.tree.map(lambda s, ps: ps, tree, p_shard)
+
+    from repro.optim import OptState
+
+    mu = mirror(opt.mu) if jax.tree_util.tree_structure(opt.mu) == \
+        jax.tree_util.tree_structure(params) else jax.tree.map(lambda _: rep, opt.mu)
+    nu = mirror(opt.nu) if jax.tree_util.tree_structure(opt.nu) == \
+        jax.tree_util.tree_structure(params) else jax.tree.map(lambda _: rep, opt.nu)
+    return OptState(rep, mu, nu)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch, cfg in ARCHS.items():
+            for sh in runnable_shapes(cfg):
+                cells.append((arch, sh.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, mp, out_dir=args.out)
+            except Exception as e:  # noqa: BLE001 — a failed cell is a bug
+                traceback.print_exc()
+                failures.append((arch, shape, mp, repr(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILED cells:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(cells) * len(meshes)} dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Roofline terms per (arch x shape x mesh) from the compiled dry-run.
+
+    compute_s    = HLO_dot_FLOPs_per_device / peak_FLOPs
+    memory_s     = HBM_bytes_per_device / HBM_bw
+    collective_s = collective_wire_bytes_per_device / ICI_bw
+
+Sources:
+* **compute** — trip-corrected dot FLOPs parsed from the compiled HLO
+  (hlo_analysis), i.e. what XLA actually scheduled (includes remat
+  recompute); cross-checked against the analytic ``expected_hlo_flops``.
+* **memory** — analytic per-device HBM traffic model (documented per term
+  below).  XLA's ``bytes accessed`` is unusable here: while bodies are
+  counted once and CPU fusion differs from TPU.
+* **collective** — wire bytes parsed from the compiled HLO collectives,
+  divided over the links of a chip (ICI is per-link; we charge the full
+  per-device payload against one link — conservative).
+
+Hardware constants (task brief, TPU v5e-class):
+197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _mesh_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode: D = B·1."""
+    n = cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def expected_hlo_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic estimate of *compiled* FLOPs: model flops x remat factor
+    (full remat recomputes the forward once during backward: 8/6) plus the
+    quantization ops are element-wise (not dot FLOPs)."""
+    mf = model_flops(cfg, shape)
+    if shape.kind == "train" and cfg.remat == "full":
+        return mf * 8.0 / 6.0
+    return mf
+
+
+def hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, mesh,
+              microbatch: int = 0) -> float:
+    """Per-device HBM traffic model (bytes / step).
+
+    train : params{read fwd + read bwd-remat (bf16-equiv 2B each) + grad
+            write fp32 + opt read/write (m[,v] + fp32 master) }
+            + activations {residual carry write+read fwd, write+read bwd}
+            + logits/embedding traffic
+    decode: params read (2B) + KV/SSM cache read+write + small activations
+    prefill: params read + activations + cache write
+    """
+    sizes = _mesh_sizes(mesh)
+    n_dev = int(np.prod(list(sizes.values())))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    param_shards = sizes.get("data", 1) * sizes.get("model", 1)  # FSDP x TP
+    n = cfg.n_params()
+    b_loc = max(1, shape.global_batch // dp)
+    layers = cfg.n_layers + (cfg.enc_layers or 0)
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        # per param: 2B fwd read + 2B bwd read (bf16) + 4B grad write +
+        # 8B fp32 master rw + 8B first-moment rw (second moment similar,
+        # folded into the same budget for sgdm/adamw parity)
+        params_bytes = n / param_shards * 24.0
+        act = b_loc * shape.seq_len * d * 2  # one residual carry (bf16)
+        act_bytes = act * layers * 4  # wr+rd fwd, wr+rd bwd (remat)
+        logits = b_loc * shape.seq_len * cfg.vocab * 4 / sizes.get("model", 1)
+        return params_bytes + act_bytes + 2 * logits
+    if shape.kind == "prefill":
+        params_bytes = n / param_shards * 2
+        act_bytes = b_loc * shape.seq_len * d * 2 * layers * 2
+        cache = _cache_bytes(cfg, shape, mesh)
+        return params_bytes + act_bytes + cache
+    # decode
+    params_bytes = n / param_shards * 2
+    cache = _cache_bytes(cfg, shape, mesh)
+    return params_bytes + cache
+
+
+def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig, mesh) -> float:
+    sizes = _mesh_sizes(mesh)
+    n_dev = int(np.prod(list(sizes.values())))
+    b = shape.global_batch
+    if cfg.family in ("dense", "moe", "encdec"):
+        per_tok = cfg.n_layers * 2 * cfg.n_kv_heads * cfg.hd * 2
+        total = b * shape.seq_len * per_tok
+    elif cfg.family == "ssm":
+        total = b * cfg.n_layers * cfg.ssm_heads * cfg.ssm_headdim * cfg.ssm_state * 4 * 2
+    else:  # hybrid: ssm states + windowed attn cache
+        ssm = b * cfg.n_layers * cfg.ssm_heads * cfg.ssm_headdim * cfg.ssm_state * 4 * 2
+        alen = min(shape.seq_len, cfg.window) if cfg.window else shape.seq_len
+        attn = b * (cfg.n_layers // max(cfg.attn_every, 1)) * alen * \
+            2 * cfg.n_kv_heads * cfg.hd * 2
+        total = ssm + attn
+    # decode reads the full cache once (+ small write); sharded over devices
+    return total / n_dev * (1.0 if shape.kind == "decode" else 1.0)
+
+
+def roofline_terms(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   record: Dict[str, Any]) -> Dict[str, Any]:
+    sizes = _mesh_sizes(mesh)
+    n_dev = int(np.prod(list(sizes.values())))
+    hlo_flops_dev = record["hlo"]["dot_flops"]
+    coll_bytes_dev = record["hlo"]["coll_bytes"]
+    mem_bytes_dev = hbm_bytes(cfg, shape, mesh, record.get("microbatch", 0))
+
+    compute_s = hlo_flops_dev / PEAK_FLOPS
+    memory_s = mem_bytes_dev / HBM_BW
+    collective_s = coll_bytes_dev / ICI_BW
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "hlo_flops_per_device": hlo_flops_dev,
+        "hbm_bytes_per_device": mem_bytes_dev,
+        "coll_bytes_per_device": coll_bytes_dev,
+        "model_flops_total": model_flops(cfg, shape),
+        "expected_hlo_flops_total": expected_hlo_flops(cfg, shape),
+    }
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["bottleneck"] = (
+        "compute" if bound == compute_s
+        else "memory" if bound == memory_s
+        else "collective"
+    )
+    # step time lower bound = max term (perfect overlap); roofline fraction =
+    # the share of that bound the *useful* model flops could sustain.
+    useful_s = terms["model_flops_total"] / n_dev / PEAK_FLOPS
+    terms["step_lower_bound_s"] = bound
+    terms["roofline_fraction"] = useful_s / bound if bound > 0 else 0.0
+    terms["model_flops_ratio"] = (
+        terms["model_flops_total"] / n_dev / hlo_flops_dev
+        if hlo_flops_dev else 0.0
+    )
+    return terms

@@ -1,0 +1,79 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins for every model input of an
+(arch x shape) cell: weak-type-correct, shardable, zero allocation.
+
+Conventions (DESIGN.md §4):
+* train/prefill cells feed ``tokens (global_batch, seq_len)`` (+ frontend
+  embeddings covering the first ``frontend_len`` positions for vlm/audio
+  stubs; enc-dec feeds ``src_emb (B, seq_len, frontend_dim)`` to the encoder
+  and targets of the same length to the decoder).
+* decode cells feed one new token against a cache of ``seq_len`` (enc-dec:
+  decoder self-cache of ``seq_len`` + a 4096-frame encoder memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig, shape_model_config
+from repro.models import lm
+
+SRC_LEN_DECODE = 4096  # encoder memory length for enc-dec decode cells
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": sds((b, 1), jnp.int32)}
+    out = {"tokens": sds((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        out["src_emb"] = sds((b, s, cfg.frontend_dim), jnp.float32)
+    elif cfg.frontend != "none":
+        out["frontend_emb"] = sds((b, cfg.frontend_len, cfg.frontend_dim),
+                                  jnp.float32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    assert shape.kind == "decode"
+    return lm.cache_spec(cfg, shape.global_batch, shape.seq_len,
+                         src_len=SRC_LEN_DECODE)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: lm.init_lm(k, cfg), jax.random.key(0))
+
+
+def abstract_opt_state(params, opt_init):
+    return jax.eval_shape(opt_init, params)
+
+
+def choose_microbatch(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      seq_shard: bool = False) -> int:
+    """Gradient-accumulation factor so the per-device residual-stream scan
+    carry stays under ~6 GB (v5e has 16 GB HBM; weights+opt take the rest).
+
+    carry bytes/device = B_local * seq * d_model * 2 B * n_layers  (bf16,
+    one saved carry per scanned layer under full remat).  Under sequence
+    parallelism the carry is additionally sharded over the model axis, which
+    usually removes the need for accumulation entirely."""
+    if shape.kind != "train":
+        return 0
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    b_local = max(1, shape.global_batch // dp)
+    layers = cfg.n_layers + (cfg.enc_layers or 0)
+    carry = b_local * shape.seq_len * cfg.d_model * 2 * layers
+    if seq_shard:
+        carry /= sizes.get("model", 1)
+    budget = 6e9
+    n = 1
+    while carry / n > budget and n < b_local:
+        n *= 2
+    return n if n > 1 else 0

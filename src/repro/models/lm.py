@@ -1,0 +1,535 @@
+"""Unified LM: init / train-loss / prefill / decode for all five families.
+
+Families
+--------
+* ``dense``  — GQA transformer (yi-34b, chatglm3, qwen2, glm4, pixtral backbone)
+* ``moe``    — GQA transformer with MoE FFN (llama4-scout, moonshot)
+* ``ssm``    — Mamba2 / SSD stack (mamba2-370m)
+* ``hybrid`` — Mamba2 backbone with a **shared** attention+MLP block applied
+               every ``attn_every`` layers (zamba2-7b)
+* ``encdec`` — encoder-decoder with cross attention (seamless-m4t)
+
+Layers are stacked (vmap-init) and executed with ``lax.scan`` (+ remat), so
+the lowered HLO is O(1) in depth — required for the 512-device dry-runs.
+Every quantization site derives its stochastic-rounding stream from
+``fold_in(step_key, layer_index)``; restart-reproducible (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import QuantConfig
+from repro.parallel import shard
+from . import nn
+from .mamba2 import apply_mamba2, init_mamba2
+from .moe import apply_moe, init_moe
+from .transformer import (
+    apply_attention,
+    apply_block,
+    apply_mlp,
+    init_attention,
+    init_block,
+    init_mlp,
+    norm_apply,
+    norm_init,
+)
+
+Array = jax.Array
+
+
+def _fold(key, tag):
+    return None if key is None else jax.random.fold_in(key, tag)
+
+
+def gather_view(p, cfg: ModelConfig):
+    """Optionally cast layer parameters to the compute dtype *before* the
+    layer scan, so FSDP all-gathers move 2-byte (bf16) rather than 4-byte
+    weights (§Perf lever; fp32 masters stay in the optimizer).  The cast is
+    element-wise on the shards, so XLA keeps it before the gather."""
+    if cfg.param_gather_dtype == "float32":
+        return p
+    dt = jnp.dtype(cfg.param_gather_dtype)
+
+    def cast(x):
+        return x.astype(dt) if x.dtype == jnp.float32 else x
+
+    out = dict(p)
+    for k in ("layers", "enc_layers", "shared_attn"):
+        if k in p:
+            out[k] = jax.tree.map(cast, p[k])
+    return out
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+def _init_layer(key, cfg: ModelConfig, kind: str):
+    if kind == "dense":
+        return init_block(key, cfg)
+    if kind == "moe":
+        ka, km = jax.random.split(key)
+        return {
+            "ln1": norm_init(cfg),
+            "attn": init_attention(ka, cfg),
+            "ln2": norm_init(cfg),
+            "moe": init_moe(km, cfg),
+        }
+    if kind == "ssm":
+        return init_mamba2(key, cfg)
+    if kind == "xdec":  # encoder-decoder decoder layer (self + cross + mlp)
+        ka, kx, km = jax.random.split(key, 3)
+        return {
+            "ln1": norm_init(cfg),
+            "attn": init_attention(ka, cfg),
+            "lnx": norm_init(cfg),
+            "xattn": init_attention(kx, cfg),
+            "ln2": norm_init(cfg),
+            "mlp": init_mlp(km, cfg),
+        }
+    raise ValueError(kind)
+
+
+def _stack_init(key, cfg: ModelConfig, n: int, kind: str):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_layer(k, cfg, kind))(keys)
+
+
+def init_lm(key, cfg: ModelConfig):
+    ks = iter(jax.random.split(key, 8))
+    d = cfg.d_model
+    p: Dict[str, Any] = {
+        "emb": nn.trunc_normal(next(ks), (cfg.vocab, d), std=0.02),
+        "final_norm": norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = nn.trunc_normal(next(ks), (cfg.vocab, d), std=0.02)
+    if cfg.frontend != "none":
+        p["frontend_proj"] = nn.init_linear(next(ks), cfg.frontend_dim, d, True)
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        p["layers"] = _stack_init(next(ks), cfg, cfg.n_layers, fam)
+    elif fam == "ssm":
+        p["layers"] = _stack_init(next(ks), cfg, cfg.n_layers, "ssm")
+    elif fam == "hybrid":
+        p["layers"] = _stack_init(next(ks), cfg, cfg.n_layers, "ssm")
+        p["shared_attn"] = init_block(next(ks), cfg)  # ONE block, reused
+    elif fam == "encdec":
+        p["enc_layers"] = _stack_init(next(ks), cfg, cfg.enc_layers, "dense")
+        p["layers"] = _stack_init(next(ks), cfg, cfg.n_layers, "xdec")
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ===========================================================================
+# embedding / head
+# ===========================================================================
+def embed(p, batch: Dict[str, Array], cfg: ModelConfig) -> Array:
+    tokens = batch["tokens"]
+    x = jnp.take(p["emb"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.frontend != "none" and "frontend_emb" in batch:
+        fe = nn.linear(p["frontend_proj"], batch["frontend_emb"].astype(
+            cfg.compute_dtype))  # unquantized: "first layer" rule
+        f = fe.shape[1]
+        x = jnp.concatenate([fe.astype(x.dtype), x[:, f:]], axis=1)
+    return shard(x, "batch", "seq", "embed")
+
+
+def logits_fn(p, x, cfg: ModelConfig) -> Array:
+    head = p["emb"] if cfg.tie_embeddings else p["lm_head"]
+    # last layer unquantized (paper Sec. VI-A)
+    out = jax.lax.dot_general(
+        x, head.astype(x.dtype), (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return shard(out, "batch", "seq", "vocab")
+
+
+# ===========================================================================
+# family bodies (full-sequence: train / prefill)
+# ===========================================================================
+def _dense_scan(p, x, cfg, qcfg, key, *, caches=None, cache_pos=0,
+                window=None, layer_kind="dense"):
+    """Scan over stacked layers; optionally threading KV caches."""
+    n = cfg.n_layers
+
+    def body(carry, inp):
+        x = carry
+        lp, idx = inp["p"], inp["i"]
+        lkey = _fold(key, idx)
+        cache = (inp["ck"], inp["cv"]) if caches is not None else None
+        if layer_kind == "moe":
+            h, nc = apply_attention(
+                lp["attn"], norm_apply(cfg, lp["ln1"], x), cfg, qcfg, lkey,
+                cache=cache, cache_pos=cache_pos, window=window)
+            x = shard(x + h.astype(x.dtype), "batch", "seq", "embed")
+            h, aux = apply_moe(lp["moe"], norm_apply(cfg, lp["ln2"], x), cfg,
+                               qcfg, _fold(lkey, 1000))
+            x = shard(x + h.astype(x.dtype), "batch", "seq", "embed")
+        else:
+            x, nc = apply_block(lp, x, cfg, qcfg, lkey, cache=cache,
+                                cache_pos=cache_pos, window=window)
+            aux = jnp.float32(0.0)
+        out = {"aux": aux}
+        if caches is not None:
+            out["ck"], out["cv"] = nc
+        return x, out
+
+    xs = {"p": p["layers"], "i": jnp.arange(n)}
+    if caches is not None:
+        xs["ck"], xs["cv"] = caches
+    x, ys = jax.lax.scan(_remat(body, cfg), x, xs)
+    new_caches = (ys["ck"], ys["cv"]) if caches is not None else None
+    return x, jnp.mean(ys["aux"]), new_caches
+
+
+def _ssm_scan(p, x, cfg, qcfg, key, *, states=None):
+    n = cfg.n_layers
+
+    def body(carry, inp):
+        x = carry
+        lp, idx = inp["p"], inp["i"]
+        st = (inp["conv"], inp["ssm"]) if states is not None else None
+        x, ns = apply_mamba2(lp, x, cfg, qcfg, _fold(key, idx), st)
+        out = {}
+        if states is not None:
+            out["conv"], out["ssm"] = ns
+        return x, out
+
+    xs = {"p": p["layers"], "i": jnp.arange(n)}
+    if states is not None:
+        xs["conv"], xs["ssm"] = states
+    x, ys = jax.lax.scan(_remat(body, cfg), x, xs)
+    new_states = (ys["conv"], ys["ssm"]) if states is not None else None
+    return x, jnp.float32(0.0), new_states
+
+
+def _hybrid_apply(p, x, cfg, qcfg, key, *, states=None, attn_caches=None,
+                  cache_pos=0, kv_valid=None, positions=None, window=None):
+    """Zamba2: mamba scan segments with the shared attn block between them.
+
+    Segment s covers layers [s*E, min((s+1)*E, L)); the shared block runs
+    after every full segment of E layers (static python structure: ~14
+    unrolled shared-block applications around scanned mamba segments).
+    """
+    e, L = cfg.attn_every, cfg.n_layers
+    n_attn = L // e
+    seg_bounds = []
+    lo = 0
+    for si in range(n_attn):
+        seg_bounds.append((lo, lo + e, si))
+        lo += e
+    tail = (lo, L, None) if lo < L else None
+
+    def seg_scan(x, lo, hi, st_slice):
+        def body(carry, inp):
+            x = carry
+            st = (inp["conv"], inp["ssm"]) if states is not None else None
+            x, ns = apply_mamba2(inp["p"], x, cfg, qcfg, _fold(key, inp["i"]), st)
+            out = {}
+            if states is not None:
+                out["conv"], out["ssm"] = ns
+            return x, out
+
+        xs = {
+            "p": jax.tree.map(lambda a: a[lo:hi], p["layers"]),
+            "i": jnp.arange(lo, hi),
+        }
+        if states is not None:
+            xs["conv"], xs["ssm"] = st_slice
+        return jax.lax.scan(_remat(body, cfg), x, xs)
+
+    new_conv, new_ssm, new_ck, new_cv = [], [], [], []
+    for (lo, hi, si) in seg_bounds + ([tail] if tail else []):
+        st_slice = None
+        if states is not None:
+            st_slice = (states[0][lo:hi], states[1][lo:hi])
+        x, ys = seg_scan(x, lo, hi, st_slice)
+        if states is not None:
+            new_conv.append(ys["conv"])
+            new_ssm.append(ys["ssm"])
+        if si is not None:  # shared attention block after the segment
+            cache = None
+            if attn_caches is not None:
+                cache = (attn_caches[0][si], attn_caches[1][si])
+            x, nc = apply_block(
+                p["shared_attn"], x, cfg, qcfg, _fold(key, 10_000 + si),
+                cache=cache, cache_pos=cache_pos, kv_valid=kv_valid,
+                positions=positions, window=window)
+            if attn_caches is not None:
+                new_ck.append(nc[0])
+                new_cv.append(nc[1])
+    new_states = None
+    if states is not None:
+        new_states = (jnp.concatenate(new_conv), jnp.concatenate(new_ssm))
+    new_attn = None
+    if attn_caches is not None:
+        new_attn = (jnp.stack(new_ck), jnp.stack(new_cv))
+    return x, jnp.float32(0.0), new_states, new_attn
+
+
+def _encoder_apply(p, batch, cfg, qcfg, key):
+    """Seamless encoder: bidirectional blocks over frontend embeddings."""
+    fe = nn.linear(p["frontend_proj"], batch["src_emb"].astype(cfg.compute_dtype))
+    x = shard(fe.astype(cfg.compute_dtype), "batch", "seq", "embed")
+
+    def body(carry, inp):
+        x, _ = apply_block(inp["p"], carry, cfg, qcfg, _fold(key, inp["i"]),
+                           causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(
+        _remat(body, cfg), x,
+        {"p": p["enc_layers"], "i": jnp.arange(cfg.enc_layers) + 20_000},
+    )
+    return x
+
+
+def _xdec_scan(p, x, cfg, qcfg, key, memory=None, *, caches=None,
+               cross_kv=None, cache_pos=0):
+    """Decoder scan with cross attention (memory = encoder output, or
+    precomputed cross K/V caches during decode)."""
+
+    def body(carry, inp):
+        x = carry
+        lp, idx = inp["p"], inp["i"]
+        lkey = _fold(key, idx)
+        cache = (inp["ck"], inp["cv"]) if caches is not None else None
+        h, nc = apply_attention(
+            lp["attn"], norm_apply(cfg, lp["ln1"], x), cfg, qcfg, lkey,
+            cache=cache, cache_pos=cache_pos)
+        x = shard(x + h.astype(x.dtype), "batch", "seq", "embed")
+        # cross attention: recompute K/V from memory (train) or reuse caches
+        if cross_kv is not None:
+            h, _ = apply_attention(
+                lp["xattn"], norm_apply(cfg, lp["lnx"], x), cfg, qcfg,
+                _fold(lkey, 500), cross_cache=(inp["xk"], inp["xv"]))
+        else:
+            h, _ = apply_attention(
+                lp["xattn"], norm_apply(cfg, lp["lnx"], x), cfg, qcfg,
+                _fold(lkey, 500), kv=memory, causal=False)
+        x = shard(x + h.astype(x.dtype), "batch", "seq", "embed")
+        h = apply_mlp(lp["mlp"], norm_apply(cfg, lp["ln2"], x), cfg, qcfg, lkey)
+        x = shard(x + h.astype(x.dtype), "batch", "seq", "embed")
+        out = {}
+        if caches is not None:
+            out["ck"], out["cv"] = nc
+        return x, out
+
+    xs = {"p": p["layers"], "i": jnp.arange(cfg.n_layers)}
+    if caches is not None:
+        xs["ck"], xs["cv"] = caches
+    if cross_kv is not None:
+        xs["xk"], xs["xv"] = cross_kv
+    x, ys = jax.lax.scan(_remat(body, cfg), x, xs)
+    new_caches = (ys["ck"], ys["cv"]) if caches is not None else None
+    return x, new_caches
+
+
+# ===========================================================================
+# train loss
+# ===========================================================================
+def lm_loss(p, batch: Dict[str, Array], cfg: ModelConfig, key=None):
+    """Causal (or seq2seq) LM loss. Returns (loss, metrics)."""
+    qcfg = cfg.qcfg()
+    p = gather_view(p, cfg)
+    if cfg.family == "encdec":
+        memory = _encoder_apply(p, batch, cfg, qcfg, _fold(key, 1))
+        x = embed(p, batch, cfg)
+        x, _ = _xdec_scan(p, x, cfg, qcfg, _fold(key, 2), memory)
+        aux = jnp.float32(0.0)
+    else:
+        x = embed(p, batch, cfg)
+        if cfg.family in ("dense", "moe"):
+            x, aux, _ = _dense_scan(p, x, cfg, qcfg, _fold(key, 2),
+                                    layer_kind=cfg.family)
+        elif cfg.family == "ssm":
+            x, aux, _ = _ssm_scan(p, x, cfg, qcfg, _fold(key, 2))
+        else:  # hybrid
+            x, aux, _, _ = _hybrid_apply(p, x, cfg, qcfg, _fold(key, 2))
+    x = norm_apply(cfg, p["final_norm"], x)
+    logits = logits_fn(p, x, cfg)
+
+    tokens = batch["tokens"]
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    mask = jnp.ones_like(targets, jnp.float32)
+    if cfg.frontend != "none" and cfg.frontend_len and cfg.family != "encdec":
+        # don't train on the frontend prefix positions
+        mask = mask * (jnp.arange(targets.shape[1])[None, :] >= cfg.frontend_len)
+    ce = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ===========================================================================
+# caches / serving
+# ===========================================================================
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 4096):
+    """ShapeDtypeStruct pytree of the decode cache (also used to allocate)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    hd, kv = cfg.hd, cfg.n_kv_heads
+    L = cfg.n_layers
+
+    def sd(shape, dtype=dt):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    if cfg.family in ("dense", "moe"):
+        return {
+            "k": sd((L, batch, max_len, kv, hd)),
+            "v": sd((L, batch, max_len, kv, hd)),
+            "pos": sd((), jnp.int32),
+        }
+    if cfg.family == "ssm":
+        return _ssm_cache_spec(cfg, batch, L, dt)
+    if cfg.family == "hybrid":
+        n_attn = L // cfg.attn_every
+        alen = min(max_len, cfg.window) if cfg.window else max_len
+        c = _ssm_cache_spec(cfg, batch, L, dt)
+        c["ak"] = sd((n_attn, batch, alen, kv, hd))
+        c["av"] = sd((n_attn, batch, alen, kv, hd))
+        return c
+    if cfg.family == "encdec":
+        return {
+            "k": sd((L, batch, max_len, kv, hd)),
+            "v": sd((L, batch, max_len, kv, hd)),
+            "xk": sd((L, batch, src_len, kv, hd)),
+            "xv": sd((L, batch, src_len, kv, hd)),
+            "pos": sd((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def _ssm_cache_spec(cfg, batch, L, dt):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jax.ShapeDtypeStruct((L, batch, cfg.ssm_conv - 1, conv_dim), dt),
+        "ssm": jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+            jnp.float32,
+        ),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 4096):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        cache_spec(cfg, batch, max_len, src_len),
+    )
+
+
+def decode_step(p, cache, tokens: Array, cfg: ModelConfig,
+                memory: Optional[Array] = None):
+    """One serving step: ``tokens (B, 1)`` -> (logits (B, vocab), cache).
+
+    No stochastic rounding at inference: nearest rounding (key=None).
+    """
+    qcfg = cfg.qcfg()
+    if qcfg is not None:
+        qcfg = dataclasses.replace(qcfg, stochastic=False)
+    x = jnp.take(p["emb"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = shard(x, "batch", None, "embed")
+    pos = cache["pos"]
+    new_cache = dict(cache)
+    if cfg.family in ("dense", "moe"):
+        x, _, ncs = _dense_scan(
+            p, x, cfg, qcfg, None, caches=(cache["k"], cache["v"]),
+            cache_pos=pos, layer_kind=cfg.family)
+        new_cache["k"], new_cache["v"] = ncs
+    elif cfg.family == "ssm":
+        x, _, nst = _ssm_scan(p, x, cfg, qcfg, None,
+                              states=(cache["conv"], cache["ssm"]))
+        new_cache["conv"], new_cache["ssm"] = nst
+    elif cfg.family == "hybrid":
+        alen = cache["ak"].shape[2]
+        if cfg.window:  # ring buffer: write slot pos % alen, all slots valid
+            wpos = pos % alen
+            kv_valid = jnp.minimum(pos + 1, alen)
+            positions = pos * jnp.ones((tokens.shape[0], 1), jnp.int32)
+        else:
+            wpos, kv_valid, positions = pos, None, None
+        x, _, nst, nattn = _hybrid_apply(
+            p, x, cfg, qcfg, None,
+            states=(cache["conv"], cache["ssm"]),
+            attn_caches=(cache["ak"], cache["av"]), cache_pos=wpos,
+            kv_valid=kv_valid, positions=positions,
+            window=None)  # the ring buffer already bounds the window
+        new_cache["conv"], new_cache["ssm"] = nst
+        new_cache["ak"], new_cache["av"] = nattn
+    elif cfg.family == "encdec":
+        x, ncs = _xdec_scan(
+            p, x, cfg, qcfg, None, caches=(cache["k"], cache["v"]),
+            cross_kv=(cache["xk"], cache["xv"]), cache_pos=pos)
+        new_cache["k"], new_cache["v"] = ncs
+    else:
+        raise ValueError(cfg.family)
+    new_cache["pos"] = pos + 1
+    x = norm_apply(cfg, p["final_norm"], x)
+    logits = logits_fn(p, x, cfg)[:, 0]
+    return logits, new_cache
+
+
+def prefill(p, batch: Dict[str, Array], cfg: ModelConfig, max_len: int):
+    """Run the full prompt, filling the cache; returns (logits_last, cache)."""
+    qcfg = cfg.qcfg()
+    if qcfg is not None:
+        qcfg = dataclasses.replace(qcfg, stochastic=False)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    src_len = batch["src_emb"].shape[1] if "src_emb" in batch else 4096
+    cache = init_cache(cfg, b, max_len, src_len)
+    x = embed(p, batch, cfg)
+    if cfg.family in ("dense", "moe"):
+        x, _, ncs = _dense_scan(p, x, cfg, qcfg, None,
+                                caches=(cache["k"], cache["v"]), cache_pos=0,
+                                layer_kind=cfg.family)
+        cache["k"], cache["v"] = ncs
+    elif cfg.family == "ssm":
+        x, _, nst = _ssm_scan(p, x, cfg, qcfg, None,
+                              states=(cache["conv"], cache["ssm"]))
+        cache["conv"], cache["ssm"] = nst
+    elif cfg.family == "hybrid":
+        x, _, nst, nattn = _hybrid_apply(
+            p, x, cfg, qcfg, None, states=(cache["conv"], cache["ssm"]),
+            attn_caches=(cache["ak"], cache["av"]), cache_pos=0)
+        cache["conv"], cache["ssm"] = nst
+        cache["ak"], cache["av"] = nattn
+    else:  # encdec
+        memory = _encoder_apply(p, batch, cfg, qcfg, None)
+        # precompute cross K/V once per layer from the encoder output
+        def xkv(lp, idx):
+            hd = cfg.hd
+            k = nn.linear(lp["xattn"]["wk"], memory, None).reshape(
+                b, -1, cfg.n_kv_heads, hd)
+            v = nn.linear(lp["xattn"]["wv"], memory, None).reshape(
+                b, -1, cfg.n_kv_heads, hd)
+            return k.astype(cache["xk"].dtype), v.astype(cache["xv"].dtype)
+
+        ks, vs = jax.vmap(xkv, in_axes=(0, 0))(p["layers"], jnp.arange(cfg.n_layers))
+        cache["xk"], cache["xv"] = ks, vs
+        x, ncs = _xdec_scan(p, x, cfg, qcfg, None,
+                            caches=(cache["k"], cache["v"]),
+                            cross_kv=(cache["xk"], cache["xv"]), cache_pos=0)
+        cache["k"], cache["v"] = ncs
+    cache["pos"] = jnp.int32(s)
+    x = norm_apply(cfg, p["final_norm"], x[:, -1:])
+    logits = logits_fn(p, x, cfg)[:, 0]
+    return logits, cache

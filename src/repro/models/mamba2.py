@@ -1,0 +1,204 @@
+"""Mamba2 block: state-space duality (SSD) chunked algorithm [arXiv:2405.21060].
+
+TPU adaptation notes (DESIGN.md §3): the chunked SSD turns the recurrence
+into dense GEMMs (intra-chunk "attention-like" matmuls + small inter-chunk
+scan) — exactly the MXU-friendly form.  The in/out projections (≈90% of the
+FLOPs) run through the paper's MLS low-bit path; the decay/recurrence math
+stays fp32 (cumulative products of ``exp(A·dt)`` need the dynamic range the
+paper reserves for its fp32-exempt ops — see DESIGN.md §Arch-applicability).
+
+Decode is O(1) per token: a single recurrent state update per layer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import QuantConfig
+from repro.parallel import shard
+from . import nn
+
+Array = jax.Array
+
+
+def _fold(key, tag):
+    return None if key is None else jax.random.fold_in(key, tag)
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    d, din = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * g * n
+    return {
+        "ln": nn.init_rmsnorm(d),
+        "in_proj": nn.init_linear(ks[0], d, 2 * din + 2 * g * n + h, std=0.02),
+        "conv_w": nn.trunc_normal(ks[1], (conv_dim, cfg.ssm_conv), std=0.2),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], (h,), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones((h,)),
+        "dt_bias": jnp.log(
+            jnp.exp(jax.random.uniform(ks[3], (h,), jnp.float32, 1e-3, 0.1)) - 1.0
+        ),
+        "out_norm": nn.init_rmsnorm(din),
+        "out_proj": nn.init_linear(ks[4], din, d, std=0.02),
+    }
+
+
+def _segsum(a: Array) -> Array:
+    """a: (..., q) -> L (..., q, q) with L[i, j] = sum_{j < t <= i} a[t],
+    -inf above the diagonal (the SSD 1-semiseparable mask)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: Array,  # (B, S, H, P) inputs (already dt-scaled by caller)
+    a: Array,  # (B, S, H)    log decays (negative), already dt-scaled
+    bm: Array,  # (B, S, G, N)
+    cm: Array,  # (B, S, G, N)
+    chunk: int,
+    init_state: Optional[Array] = None,  # (B, H, P, N)
+) -> Tuple[Array, Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N)). fp32 internal math."""
+    b, s, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc, q = s // chunk, chunk
+    rep = h // g
+    x = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    a = a.astype(jnp.float32).reshape(b, nc, q, h)
+    bm = bm.astype(jnp.float32).reshape(b, nc, q, g, n)
+    cm = cm.astype(jnp.float32).reshape(b, nc, q, g, n)
+    # broadcast kv-style groups over heads
+    bmh = jnp.repeat(bm, rep, axis=3)  # (b, nc, q, h, n)
+    cmh = jnp.repeat(cm, rep, axis=3)
+
+    a_cs = jnp.cumsum(a, axis=2)  # (b, nc, q, h)
+
+    # --- intra-chunk (diagonal blocks): (C B^T ⊙ L) x ----------------------
+    L = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))  # (b, nc, h, q, q)
+    cb = jnp.einsum("bclhn,bcshn->bchls", cmh, bmh)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", cb * L, x)
+
+    # --- chunk states: contribution of each chunk to its final state -------
+    decay_states = jnp.exp(a_cs[:, :, -1:, :] - a_cs)  # (b, nc, q, h)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn", bmh, decay_states, x)
+
+    # --- inter-chunk recurrence (tiny scan over nc) -------------------------
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])  # (b, nc, h)
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        st_c, dec_c = inp  # (b,h,p,n), (b,h)
+        new = st_c + dec_c[:, :, None, None] * carry
+        return new, carry  # emit state BEFORE this chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b, nc, h, p, n)
+
+    # --- off-diagonal: carry-in state read by each position -----------------
+    state_decay = jnp.exp(a_cs)  # (b, nc, q, h)
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bclh->bclhp", cmh, prev_states, state_decay
+    )
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Optional[Array] = None):
+    """Depthwise causal conv over the sequence. x: (B, S, C); w: (C, K).
+
+    With ``state`` (B, K-1, C) given (decode), prepends it; returns
+    (y, new_state)."""
+    k = w.shape[1]
+    if state is not None:
+        xin = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        xin = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = _depthwise(xin, w) + b
+    new_state = xin[:, -(k - 1):, :] if k > 1 else None
+    return y, new_state
+
+
+def _depthwise(x: Array, w: Array) -> Array:
+    """x: (B, T, C), w: (C, K) causal valid conv -> (B, T-K+1, C)."""
+    k = w.shape[1]
+    t = x.shape[1] - k + 1
+    out = jnp.zeros(x.shape[:1] + (t,) + x.shape[2:], jnp.float32)
+    for i in range(k):  # K is 4: unrolled taps vectorize cleanly
+        out = out + x[:, i : i + t, :].astype(jnp.float32) * w[:, i]
+    return out
+
+
+def apply_mamba2(
+    p,
+    x: Array,  # (B, S, d)
+    cfg: ModelConfig,
+    qcfg: Optional[QuantConfig],
+    key,
+    state: Optional[Tuple[Array, Array]] = None,  # (conv_state, ssm_state)
+):
+    """Full-sequence (train/prefill) or stateful (decode) Mamba2 block.
+
+    Returns (y, new_state); new_state is None unless ``state`` was given or
+    S == 1 (decode)."""
+    b, s, d = x.shape
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_headdim
+    res = x
+    xn = nn.rmsnorm(p["ln"], x)
+    zxbcdt = nn.linear(p["in_proj"], xn, qcfg, _fold(key, 0), wire=0)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * g * n], axis=-1)
+    conv_state = state[0] if state is not None else None
+    xbc, new_conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin, bm, cm = jnp.split(xbc, [din, din + g * n], axis=-1)
+    xin = shard(xin.reshape(b, s, h, pdim), "batch", "seq", "heads", None)
+    bm = bm.reshape(b, s, g, n)
+    cm = cm.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])  # (H,)
+
+    xdt = xin.astype(jnp.float32) * dt[..., None]
+    adt = a * dt  # (B, S, H) negative
+
+    ssm_state = state[1] if state is not None else None
+    if s == 1 and state is not None:
+        # O(1) decode: state = exp(a dt) * state + B ⊗ x dt ; y = C · state
+        dA = jnp.exp(adt[:, 0])  # (B, H)
+        bmh = jnp.repeat(bm[:, 0], h // g, axis=1)  # (B, H, N)
+        cmh = jnp.repeat(cm[:, 0], h // g, axis=1)
+        new_ssm = dA[:, :, None, None] * ssm_state + jnp.einsum(
+            "bhn,bhp->bhpn", bmh, xdt[:, 0]
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", new_ssm, cmh)[:, None]  # (B,1,H,P)
+    else:
+        chunk = min(cfg.ssm_chunk, s)
+        while s % chunk:  # largest divisor of s not above ssm_chunk
+            chunk -= 1
+        y, new_ssm = ssd_chunked(xdt, adt, bm, cm, chunk, ssm_state)
+
+    y = y + p["D"][:, None] * xin.astype(jnp.float32)
+    y = y.reshape(b, s, din)
+    y = nn.rmsnorm(p["out_norm"], y * jax.nn.silu(z.astype(jnp.float32)))
+    out = nn.linear(p["out_proj"], y.astype(x.dtype), qcfg, _fold(key, 1), wire=1)
+    new_state = None
+    if state is not None or s == 1:
+        new_state = (new_conv_state, new_ssm)
+    return res + out.astype(x.dtype), new_state

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded dispatch.
+
+Dispatch is computed **per batch row** (sort-based position assignment inside
+each row) so the scatter/gather never crosses the data-parallel sharding of
+the batch dimension; expert weights are sharded over the ``expert`` logical
+axis (EP on the "model" mesh axis).  Tokens beyond an expert's capacity are
+dropped (contribute zero), GShard-style.
+
+Per the paper's layer-exemption policy the router runs in fp32 and is never
+quantized; the expert GEMMs go through the MLS low-bit path (they dominate
+the FLOPs — the best case for the paper's technique).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import QuantConfig, lowbit_matmul
+from repro.parallel import shard
+from . import nn
+
+Array = jax.Array
+
+
+def _fold(key, tag):
+    return None if key is None else jax.random.fold_in(key, tag)
+
+
+def init_moe(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+
+    def expert_stack(k, shape, fan_in, fan_out):
+        keys = jax.random.split(k, e)
+        return jax.vmap(lambda kk: nn.xavier(kk, shape, fan_in, fan_out))(keys)
+
+    p = {
+        "router": nn.init_linear(ks[0], d, e, False, std=0.02),
+        "w_gate": expert_stack(ks[1], (d, f), d, f),
+        "w_up": expert_stack(ks[2], (d, f), d, f),
+        "w_down": expert_stack(ks[3], (f, d), f, d),
+    }
+    if cfg.n_shared_experts:
+        from .transformer import init_mlp
+
+        p["shared"] = init_mlp(
+            ks[4], cfg, d_ff=cfg.moe_d_ff * cfg.n_shared_experts
+        )
+    return p
+
+
+def _positions_in_runs(sorted_e: Array) -> Array:
+    """For a sorted expert-id row, the index of each entry within its run."""
+    t = sorted_e.shape[0]
+    idx = jnp.arange(t)
+    run_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]]
+    )
+    start_idx = jnp.where(run_start, idx, 0)
+    start_idx = jax.lax.associative_scan(jnp.maximum, start_idx)
+    return idx - start_idx
+
+
+def apply_moe(p, x: Array, cfg: ModelConfig, qcfg: Optional[QuantConfig], key):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    With ``cfg.moe_dispatch_chunks > 1`` the sequence is split into that many
+    row groups and dispatch (sort/scatter/gather) runs per group — local
+    under sequence sharding; capacity applies per group."""
+    b0, s0, d0 = x.shape
+    nc = cfg.moe_dispatch_chunks
+    if nc > 1 and s0 % nc == 0:
+        y, aux = _apply_moe_rows(
+            p, x.reshape(b0 * nc, s0 // nc, d0), cfg, qcfg, key)
+        return y.reshape(b0, s0, d0), aux
+    return _apply_moe_rows(p, x, cfg, qcfg, key)
+
+
+def _apply_moe_rows(p, x: Array, cfg: ModelConfig, qcfg: Optional[QuantConfig],
+                    key):
+    b, s, d = x.shape
+    e, k, f = cfg.n_experts, cfg.top_k, cfg.moe_d_ff
+    cap = int(s * k / e * cfg.capacity_factor + 1)
+
+    # ---- routing (fp32, unquantized — paper's first/last-layer reasoning) --
+    logits = nn.linear(p["router"], x.astype(jnp.float32), None)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, S, E)
+    topw, topi = jax.lax.top_k(probs, k)  # (B, S, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch/GShard form)
+    me = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topi, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+    ) / k
+    aux = e * jnp.sum(me * ce)
+
+    # ---- per-row dispatch ------------------------------------------------
+    t = s * k
+    e_flat = topi.reshape(b, t)
+    w_flat = topw.reshape(b, t)
+
+    order = jnp.argsort(e_flat, axis=1, stable=True)  # (B, T)
+    se = jnp.take_along_axis(e_flat, order, axis=1)
+    sw = jnp.take_along_axis(w_flat, order, axis=1)
+    pos = jax.vmap(_positions_in_runs)(se)  # (B, T)
+    tok = order // k  # source token of each dispatch slot
+
+    def scatter_row(xrow, se_r, pos_r, tok_r):
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        return buf.at[se_r, pos_r].set(xrow[tok_r], mode="drop")
+
+    buf = jax.vmap(scatter_row)(x, se, pos, tok)  # (B, E, C, d)
+    buf = shard(buf, "moe_rows", None, None, None)
+
+    # ---- expert FFN (MLS-quantized GEMMs), batched over experts ----------
+    xe = buf.transpose(1, 0, 2, 3).reshape(e, b * cap, d)
+
+    def expert_ffn(xi, wg, wu, wd, ki):
+        if qcfg is not None and qcfg.enabled:
+            g = lowbit_matmul(xi, wg, _fold(ki, 0), qcfg)
+            u = lowbit_matmul(xi, wu, _fold(ki, 1), qcfg)
+            h = (jax.nn.silu(g) * u).astype(xi.dtype)
+            return lowbit_matmul(h, wd, _fold(ki, 2), qcfg)
+        g = xi @ wg.astype(xi.dtype)
+        u = xi @ wu.astype(xi.dtype)
+        h = (jax.nn.silu(g) * u).astype(xi.dtype)
+        return h @ wd.astype(xi.dtype)
+
+    if key is not None and qcfg is not None and qcfg.enabled and qcfg.stochastic:
+        ekeys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(e))
+        ye = jax.vmap(expert_ffn)(xe, p["w_gate"], p["w_up"], p["w_down"], ekeys)
+    else:
+        ye = jax.vmap(lambda xi, wg, wu, wd: expert_ffn(xi, wg, wu, wd, None))(
+            xe, p["w_gate"], p["w_up"], p["w_down"]
+        )
+    ye = ye.reshape(e, b, cap, d).transpose(1, 0, 2, 3)  # (B, E, C, d)
+    ye = shard(ye, "moe_rows", None, None, None)
+
+    # ---- gather back + combine -------------------------------------------
+    def gather_row(buf_r, se_r, pos_r, sw_r, tok_r):
+        vals = buf_r.at[se_r, pos_r].get(mode="fill", fill_value=0.0)  # (T, d)
+        y = jnp.zeros((s, d), vals.dtype)
+        return y.at[tok_r].add(vals * sw_r[:, None].astype(vals.dtype))
+
+    y = jax.vmap(gather_row)(ye, se, pos, sw, tok)
+
+    if "shared" in p:
+        from .transformer import apply_mlp
+
+        y = y + apply_mlp(p["shared"], x, cfg, qcfg, _fold(key, 9999))
+    return y.astype(x.dtype), aux

@@ -1,0 +1,172 @@
+"""Unified transformer components: GQA attention (full/half-rotary, optional
+QKV bias, sliding window, KV cache) and gated MLP — every GEMM optionally
+routed through the paper's MLS low-bit training path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import QuantConfig
+from repro.parallel import shard
+from . import nn
+
+Array = jax.Array
+
+
+def _fold(key, tag):
+    return None if key is None else jax.random.fold_in(key, tag)
+
+
+def norm_init(cfg: ModelConfig, d=None):
+    d = d or cfg.d_model
+    return nn.init_rmsnorm(d) if cfg.norm == "rmsnorm" else nn.init_layernorm(d)
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    return nn.rmsnorm(p, x) if cfg.norm == "rmsnorm" else nn.layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": nn.init_linear(ks[0], d, cfg.n_heads * hd, cfg.qkv_bias, std=0.02),
+        "wk": nn.init_linear(ks[1], d, cfg.n_kv_heads * hd, cfg.qkv_bias, std=0.02),
+        "wv": nn.init_linear(ks[2], d, cfg.n_kv_heads * hd, cfg.qkv_bias, std=0.02),
+        "wo": nn.init_linear(ks[3], cfg.n_heads * hd, d, False, std=0.02),
+    }
+
+
+def apply_attention(
+    p,
+    x: Array,  # (B, S, d)
+    cfg: ModelConfig,
+    qcfg: Optional[QuantConfig],
+    key,
+    *,
+    causal: bool = True,
+    positions: Array | None = None,  # (B, S) absolute positions of x
+    cache: Optional[Tuple[Array, Array]] = None,  # (B, M, KV, hd) x2
+    cache_pos: Array | int = 0,  # write offset into the cache
+    kv_valid: Array | int | None = None,  # #valid cache slots (ring buffers)
+    window: Optional[int] = None,
+    kv: Array | None = None,  # cross-attention source (B, Sk, d)
+    cross_cache: Optional[Tuple[Array, Array]] = None,  # read-only K/V
+):
+    b, s, d = x.shape
+    hd = cfg.hd
+    q = nn.linear(p["wq"], x, qcfg, _fold(key, 0), wire=0).reshape(b, s, cfg.n_heads, hd)
+    q = shard(q, "batch", "seq", "heads", None)
+    q_chunk = 1024 if s > 4096 else None
+
+    if cross_cache is not None:
+        # cross-attention over precomputed encoder K/V: no rope, no update
+        ck, cv = cross_cache
+        out = nn.gqa_attention(q, ck, cv, causal=False, q_chunk=q_chunk)
+        out = out.reshape(b, s, cfg.n_heads * hd).astype(x.dtype)
+        return nn.linear(p["wo"], out, qcfg, _fold(key, 3), wire=1), None
+
+    xkv = kv if kv is not None else x
+    sk = xkv.shape[1]
+    k = nn.linear(p["wk"], xkv, qcfg, _fold(key, 1), wire=0).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = nn.linear(p["wv"], xkv, qcfg, _fold(key, 2), wire=0).reshape(b, sk, cfg.n_kv_heads, hd)
+    # "kv_seq" (not "seq"): under sequence parallelism K/V gather their
+    # sequence dim (cheap for GQA) while Q stays sequence-sharded.
+    k = shard(k, "batch", "kv_seq", "kv_heads", None)
+    v = shard(v, "batch", "kv_seq", "kv_heads", None)
+
+    if kv is None and cfg.rotary_pct > 0:  # no rope on cross-attention
+        rd = int(hd * cfg.rotary_pct)
+        if positions is None:  # absolute positions (decode: offset by cache)
+            # NB: for ring-buffer caches the caller supplies true positions.
+            positions = (jnp.arange(s) + cache_pos)[None, :] * jnp.ones(
+                (b, 1), jnp.int32
+            )
+        sin, cos = nn.rope_angles(positions, hd, cfg.rope_theta, rd)
+        q = nn.apply_rope(q, sin, cos, rd)
+        k = nn.apply_rope(k, sin, cos, rd)
+
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        if kv_valid is not None:
+            # ring buffer: slot order is arbitrary; rope carries positions
+            out = nn.gqa_attention(q, ck, cv, causal=False, kv_len=kv_valid,
+                                   q_chunk=q_chunk)
+        else:
+            out = nn.gqa_attention(q, ck, cv, causal=causal,
+                                   q_offset=cache_pos, window=window,
+                                   kv_len=cache_pos + s, q_chunk=q_chunk)
+        new_cache = (ck, cv)
+    else:
+        out = nn.gqa_attention(q, k, v, causal=causal and kv is None,
+                               window=window, q_chunk=q_chunk)
+        new_cache = None
+
+    out = shard(out, "batch", "seq", "heads", None)
+    out = out.reshape(b, s, cfg.n_heads * hd).astype(x.dtype)
+    y = nn.linear(p["wo"], out, qcfg, _fold(key, 3), wire=1)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    p = {
+        "w_up": nn.init_linear(ks[0], d, f, False, std=0.02),
+        "w_down": nn.init_linear(ks[1], f, d, False, std=0.02),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = nn.init_linear(ks[2], d, f, False, std=0.02)
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig, qcfg, key):
+    up = nn.linear(p["w_up"], x, qcfg, _fold(key, 10), wire=0)
+    if cfg.gated_mlp:
+        gate = nn.linear(p["w_gate"], x, qcfg, _fold(key, 11), wire=0)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard(h.astype(x.dtype), "batch", "seq", "mlp")
+    return nn.linear(p["w_down"], h, qcfg, _fold(key, 12), wire=1)
+
+
+# ---------------------------------------------------------------------------
+# decoder block (dense)
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": norm_init(cfg),
+        "attn": init_attention(ka, cfg),
+        "ln2": norm_init(cfg),
+        "mlp": init_mlp(km, cfg),
+    }
+
+
+def apply_block(
+    p, x, cfg: ModelConfig, qcfg, key, *,
+    positions=None, cache=None, cache_pos=0, kv_valid=None, window=None,
+    causal=True,
+):
+    h, new_cache = apply_attention(
+        p["attn"], norm_apply(cfg, p["ln1"], x), cfg, qcfg, key,
+        causal=causal, positions=positions, cache=cache, cache_pos=cache_pos,
+        kv_valid=kv_valid, window=window,
+    )
+    x = shard(x + h.astype(x.dtype), "batch", "seq", "embed")
+    h = apply_mlp(p["mlp"], norm_apply(cfg, p["ln2"], x), cfg, qcfg, key)
+    x = shard(x + h.astype(x.dtype), "batch", "seq", "embed")
+    return x, new_cache

@@ -1,0 +1,17 @@
+from .optimizers import (
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+    sgdm_init,
+    sgdm_update,
+    step_decay_schedule,
+)
+
+__all__ = [
+    "OptState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "cosine_schedule", "make_optimizer", "sgdm_init", "sgdm_update",
+    "step_decay_schedule",
+]

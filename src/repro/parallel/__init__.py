@@ -1,0 +1,13 @@
+from .sharding import (
+    DEFAULT_RULES,
+    AxisRules,
+    axis_rules,
+    current_rules,
+    logical_to_mesh,
+    shard,
+)
+
+__all__ = [
+    "DEFAULT_RULES", "AxisRules", "axis_rules", "current_rules",
+    "logical_to_mesh", "shard",
+]

@@ -1,0 +1,196 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axis names;
+the launcher binds logical names to physical mesh axes.
+
+This is the MaxText/flax-linen "logical axis rules" pattern without the flax
+dependency: model code stays mesh-agnostic, and dry-run/perf iterations can
+re-bind rules (e.g. move "embed" from None to "model", or turn on sequence
+sharding) without touching layer code.
+
+Logical axes used by the model zoo:
+
+    batch      — data-parallel batch dim            -> ("pod", "data")
+    seq        — sequence (activation/SP sharding)  -> None (perf lever)
+    embed      — residual stream d_model            -> None (or "model" for SP)
+    heads      — attention heads                    -> "model"
+    kv_heads   — kv heads (GQA)                     -> "model" when divisible
+    mlp        — FFN hidden                          -> "model"
+    vocab      — vocabulary                          -> "model"
+    expert     — MoE experts                         -> "model"
+    fsdp       — parameter shard dim (FSDP)          -> "data"
+    stage      — layer-stack dim (scan-over-layers)  -> None
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping logical axis name -> physical mesh axis (or None)."""
+
+    rules: Tuple[Tuple[str, Optional[object]], ...]
+
+    def get(self, name: str):
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def replace(self, **kw) -> "AxisRules":
+        d = dict(self.rules)
+        d.update(kw)
+        return AxisRules(tuple(d.items()))
+
+
+DEFAULT_RULES = AxisRules(
+    rules=(
+        ("batch", ("pod", "data")),
+        ("seq", None),
+        ("embed", None),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("mlp", "model"),
+        ("vocab", "model"),
+        ("expert", "model"),
+        ("fsdp", "data"),
+        ("stage", None),
+        ("cache_seq", "model"),  # decode KV caches shard over TP
+        ("kv_seq", None),  # attention K/V seq dim: gathered under SP
+        ("moe_rows", ("pod", "data")),  # MoE dispatch row groups
+    )
+)
+
+# Sequence-parallel variant (§Perf): the residual stream / activations shard
+# their sequence dim over the TP axis; attention K/V are gathered (cheap for
+# GQA) while Q stays sequence-sharded.  Removes the gradient-accumulation
+# requirement for the train_4k cells.
+SP_RULES = DEFAULT_RULES.replace(
+    seq="model", moe_rows=("pod", "data", "model")
+)
+
+
+def wire_pin(x: jax.Array, fsdp_dim: int) -> jax.Array:
+    """Pin the weight gather onto *this* tensor (the packed uint8 codes or
+    bf16 unit values) instead of somewhere upstream in the fp32 quantization
+    math.
+
+    Emits a (sharded, then gathered) constraint pair.  Under feature-TP
+    rules only the FSDP dim is gathered (TP dims stay UNCONSTRAINED); under
+    sequence-sharding rules (``seq`` mapped to a mesh axis) activations are
+    row-sharded, so the weight must be gathered over *all* dims — which is
+    exactly when moving 1-byte codes instead of 4-byte floats pays off most.
+    """
+    rules, mesh = current_rules(), _current_mesh()
+    if rules is None or mesh is None:
+        return x
+    ax = _prune(mesh, rules.get("fsdp"))
+    if ax is None or x.ndim <= fsdp_dim:
+        return x
+    if x.shape[fsdp_dim] % _axis_size(mesh, ax) != 0:
+        return x
+    seq_mode = _prune(mesh, rules.get("seq")) is not None
+    U = P.UNCONSTRAINED
+    sp1 = P(*[ax if i == fsdp_dim else U for i in range(x.ndim)])
+    if seq_mode:  # gather every dim (activations are row-sharded)
+        sp2 = P(*([None] * x.ndim))
+    else:  # gather only the FSDP dim; TP dims stay as they are
+        sp2 = P(*[None if i == fsdp_dim else U for i in range(x.ndim)])
+    x = jax.lax.with_sharding_constraint(x, sp1)
+    return jax.lax.with_sharding_constraint(x, sp2)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+def _current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules, mesh: Optional[Mesh] = None):
+    """Bind logical->physical rules (and optionally a mesh) for model code."""
+    prev = (current_rules(), _current_mesh())
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def _prune(mesh: Mesh, spec_entry):
+    """Drop mesh axes that don't exist in the bound mesh (single-pod vs
+    multi-pod reuse the same rules)."""
+    if spec_entry is None:
+        return None
+    if isinstance(spec_entry, str):
+        return spec_entry if spec_entry in mesh.axis_names else None
+    pruned = tuple(a for a in spec_entry if a in mesh.axis_names)
+    return pruned if pruned else None
+
+
+def logical_to_mesh(logical: Tuple[Optional[str], ...],
+                    rules: Optional[AxisRules] = None,
+                    mesh: Optional[Mesh] = None) -> P:
+    rules = rules or current_rules() or DEFAULT_RULES
+    mesh = mesh or _current_mesh()
+    entries = []
+    for name in logical:
+        e = rules.get(name) if name is not None else None
+        if mesh is not None:
+            e = _prune(mesh, e)
+        entries.append(e)
+    return P(*entries)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = (entry,) if isinstance(entry, str) else entry
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in names:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with a sharding constraint from logical axis names.
+
+    No-op when no rules are bound (unit tests, single-device smoke runs).
+    Entries whose mesh-axis size does not divide the dimension are dropped —
+    otherwise XLA falls back to "involuntary full rematerialization"
+    (replicate + repartition), which wrecks the collective roofline term.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    mesh = _current_mesh()
+    spec = logical_to_mesh(logical, rules)
+    if mesh is not None:
+        entries, used = [], set()
+        for dim, e in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+            if e is not None:
+                # drop mesh axes already used by an earlier dim (a rules
+                # variant may map two logical axes to the same mesh axis,
+                # e.g. seq->model + heads->model under sequence parallelism)
+                names = (e,) if isinstance(e, str) else tuple(e)
+                names = tuple(n for n in names if n not in used)
+                e = (names[0] if len(names) == 1 else names) if names else None
+            # drop only when dim < axis size (XLA pads non-divisible dims at
+            # <= 2x waste; replication would cost the full axis factor)
+            if e is not None and dim < _axis_size(mesh, e):
+                e = None
+            if e is not None:
+                used.update((e,) if isinstance(e, str) else e)
+            entries.append(e)
+        spec = P(*entries)
+    return jax.lax.with_sharding_constraint(x, spec)

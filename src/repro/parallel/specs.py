@@ -1,0 +1,163 @@
+"""Parameter / input PartitionSpec inference.
+
+Model code is mesh-agnostic; this module maps every parameter leaf to a
+*logical* axis tuple by its tree path, then binds logical -> physical mesh
+axes through :mod:`repro.parallel.sharding` rules, dropping any axis whose
+size does not divide the dimension (GQA kv-head counts etc. stay replicated
+rather than erroring).
+
+The resulting layout is the standard 2-D "FSDP x TP" scheme:
+parameters shard over ``data`` (FSDP) and ``model`` (TP/EP); the ``pod``
+axis is pure DP — parameters are **replicated across pods** so the only
+cross-pod traffic is the gradient all-reduce (optionally MLS-compressed).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import AxisRules, DEFAULT_RULES, logical_to_mesh
+
+# (path-substring, logical axes per trailing dim) — first match wins.
+# Axes are aligned to the *trailing* dims; stacked layer dims get "stage".
+_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    ("emb", ("vocab", "fsdp")),
+    ("lm_head", ("vocab", "fsdp")),
+    ("frontend_proj", (None, "fsdp")),
+    ("router", ("fsdp", None)),
+    # MoE expert stacks (E, d, f) / (E, f, d)
+    ("moe']['w_gate", ("expert", "fsdp", None)),
+    ("moe']['w_up", ("expert", "fsdp", None)),
+    ("moe']['w_down", ("expert", None, "fsdp")),
+    ("wq']['b", ("heads",)),
+    ("wk']['b", ("kv_heads",)),
+    ("wv']['b", ("kv_heads",)),
+    ("wo']['b", ("fsdp",)),
+    ("wq", ("fsdp", "heads")),
+    ("wk", ("fsdp", "kv_heads")),
+    ("wv", ("fsdp", "kv_heads")),
+    ("wo", ("heads", "fsdp")),
+    ("w_gate", ("fsdp", "mlp")),
+    ("w_up", ("fsdp", "mlp")),
+    ("w_down", ("mlp", "fsdp")),
+    ("in_proj", ("fsdp", "mlp")),
+    ("out_proj", ("mlp", "fsdp")),
+    ("conv_w", ("mlp", None)),
+    ("conv_b", ("mlp",)),
+    ("A_log", (None,)),
+    ("dt_bias", (None,)),
+)
+
+
+def _mesh_axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = (entry,) if isinstance(entry, str) else entry
+    return int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[n]
+                        for n in names if n in mesh.axis_names] or [1]))
+
+
+def logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    for sub, axes in _RULES:
+        if sub in path:
+            n = len(axes)
+            if ndim >= n:
+                lead = ("stage",) + (None,) * (ndim - n - 1) if ndim > n else ()
+                return tuple(lead) + axes
+            return axes[-ndim:] if ndim else ()
+    return (None,) * ndim  # norms, scalars, biases without rules: replicate
+
+
+def spec_for(path: str, shape, mesh: Mesh, rules: AxisRules) -> P:
+    logical = logical_axes_for(path, len(shape))
+    entries = []
+    for dim, name in zip(shape, logical):
+        e = rules.get(name) if name else None
+        size = _mesh_axis_size(mesh, e)
+        if e is None or size <= 1 or dim % size != 0:
+            entries.append(None)
+        else:
+            # prune axes missing from this mesh (pod vs single-pod reuse)
+            if isinstance(e, tuple):
+                e = tuple(a for a in e if a in mesh.axis_names) or None
+            elif e not in mesh.axis_names:
+                e = None
+            entries.append(e)
+    return P(*entries)
+
+
+def param_shardings(tree: Any, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """Pytree of NamedShardings matching ``tree`` (arrays or SDS leaves)."""
+
+    def f(path, leaf):
+        p = jax.tree_util.keystr(path)
+        return NamedSharding(mesh, spec_for(p, leaf.shape, mesh, rules))
+
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+# ---------------------------------------------------------------------------
+# input / cache shardings
+# ---------------------------------------------------------------------------
+_BATCH_AXES = {
+    "tokens": ("batch", None),
+    "frontend_emb": ("batch", None, None),
+    "src_emb": ("batch", None, None),
+    "image": ("batch", None, None, None),
+    "label": ("batch",),
+}
+
+_CACHE_AXES = {
+    "k": ("stage", "batch", "cache_seq", None, None),
+    "v": ("stage", "batch", "cache_seq", None, None),
+    "xk": ("stage", "batch", "cache_seq", None, None),
+    "xv": ("stage", "batch", "cache_seq", None, None),
+    "ak": ("stage", "batch", "cache_seq", None, None),
+    "av": ("stage", "batch", "cache_seq", None, None),
+    "conv": ("stage", "batch", None, "mlp"),
+    "ssm": ("stage", "batch", "heads", None, None),
+    "pos": (),
+}
+
+
+def _named(mesh, rules, logical, shape):
+    entries = []
+    for dim, name in zip(shape, logical):
+        e = rules.get(name) if name else None
+        size = _mesh_axis_size(mesh, e)
+        if e is None or size <= 1 or dim % size != 0:
+            entries.append(None)
+        else:
+            if isinstance(e, tuple):
+                e = tuple(a for a in e if a in mesh.axis_names) or None
+            elif e not in mesh.axis_names:
+                e = None
+            entries.append(e)
+    return NamedSharding(mesh, P(*entries))
+
+
+def _last_key(path) -> str:
+    import re
+
+    keys = re.findall(r"\['([^']+)'\]", jax.tree_util.keystr(path))
+    return keys[-1] if keys else jax.tree_util.keystr(path)
+
+
+def batch_shardings(batch: Any, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    def f(path, leaf):
+        key = _last_key(path)
+        logical = _BATCH_AXES.get(key, ("batch",) + (None,) * (len(leaf.shape) - 1))
+        return _named(mesh, rules, logical, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(f, batch)
+
+
+def cache_shardings(cache: Any, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    def f(path, leaf):
+        logical = _CACHE_AXES.get(_last_key(path), (None,) * len(leaf.shape))
+        return _named(mesh, rules, logical, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(f, cache)

@@ -1,0 +1,56 @@
+"""Batched serving engine: prefill + incremental decode over a KV/SSM cache.
+
+Inference uses nearest rounding (no stochastic-rounding key), per
+``lm.decode_step``.  Sampling is greedy or temperature-based; generation is
+jit-compiled with donated caches so decode steps run in-place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    params: object
+    max_len: int = 4096
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, batch: lm.prefill(p, batch, self.cfg, self.max_len)
+        )
+        self._decode = jax.jit(
+            lambda p, cache, tok: lm.decode_step(p, cache, tok, self.cfg),
+            donate_argnums=(1,),
+        )
+
+    def generate(
+        self,
+        batch: Dict[str, jax.Array],  # {"tokens": (B, S_prompt), ...}
+        max_new_tokens: int,
+        temperature: float = 0.0,
+        key: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Returns generated token ids (B, max_new_tokens)."""
+        logits, cache = self._prefill(self.params, batch)
+        toks = []
+        tok = self._sample(logits, temperature, key, 0)
+        toks.append(tok)
+        for i in range(1, max_new_tokens):
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = self._sample(logits, temperature, key, i)
+            toks.append(tok)
+        return jnp.concatenate(toks, axis=1)
+
+    def _sample(self, logits, temperature, key, i):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, -1)[:, None]
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(k, logits / temperature)[:, None]

@@ -1,0 +1,8 @@
+from .checkpoint import CheckpointManager
+from .straggler import StragglerMonitor
+from .trainer import make_prefill_step, make_serve_step, make_train_step
+
+__all__ = [
+    "CheckpointManager", "StragglerMonitor", "make_prefill_step",
+    "make_serve_step", "make_train_step",
+]

@@ -1,0 +1,48 @@
+"""Straggler / step-time monitoring.
+
+On a TPU pod slice every host runs the same SPMD program, so a straggler
+host stalls the whole step (collectives are synchronous).  Mitigation at
+1000+ nodes is detection + preempt/restart-from-checkpoint (which
+``CheckpointManager`` makes cheap); this module provides the detection:
+an EMA step timer that flags steps (or, with per-host times fed in from an
+out-of-band channel, hosts) exceeding ``threshold`` x the EMA.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    ema_decay: float = 0.9
+    threshold: float = 2.0  # flag if step_time > threshold * ema
+    warmup_steps: int = 3  # ignore compile-dominated first steps
+    ema: Optional[float] = None
+    steps: int = 0
+    flagged: List[int] = dataclasses.field(default_factory=list)
+    _t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        dt = time.perf_counter() - self._t0
+        self.steps += 1
+        if self.steps <= self.warmup_steps:
+            return dt
+        if self.ema is None:
+            self.ema = dt
+        slow = dt > self.threshold * self.ema
+        if slow:
+            self.flagged.append(self.steps)
+        self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * dt
+        return dt
+
+    def report(self) -> dict:
+        return {
+            "steps": self.steps,
+            "ema_step_time_s": self.ema,
+            "straggler_steps": list(self.flagged),
+        }

@@ -1,0 +1,101 @@
+"""Train/serve step builders: loss -> grads -> clip -> optimizer, with
+microbatch gradient accumulation, deterministic per-step RNG, and the
+optional MLS-compressed cross-pod gradient all-reduce.
+
+``make_train_step`` returns a pure function suitable both for ``jax.jit``
+execution and for the AOT multi-pod dry-run (``.lower().compile()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import lm
+from repro.optim import clip_by_global_norm, cosine_schedule, make_optimizer
+from repro.parallel import shard
+
+
+def make_train_step(run: RunConfig, lr_fn: Optional[Callable] = None):
+    cfg = run.model
+    opt_init, opt_update = make_optimizer(
+        run.optimizer, weight_decay=run.weight_decay
+    )
+    lr_fn = lr_fn or cosine_schedule(run.lr, warmup=100, total=10_000)
+
+    def loss_fn(params, batch, key):
+        return lm.lm_loss(params, batch, cfg, key)
+
+    def train_step(params, opt_state, batch):
+        step = opt_state.step
+        key = jax.random.fold_in(jax.random.key(run.seed), step)
+        batch = jax.tree.map(lambda x: shard(x, "batch"), batch)
+
+        if run.microbatch and run.microbatch > 1:
+            n = run.microbatch
+
+            def resh(x):
+                b = x.shape[0]
+                return x.reshape((n, b // n) + x.shape[1:])
+
+            mbatch = jax.tree.map(resh, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb, key
+                )
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.float32(0.0)), mbatch
+            )
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+            metrics: Dict[str, Any] = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, batch, key)
+
+        if run.grad_compression:
+            # cross-pod exchange of MLS-compressed gradients happens in the
+            # launcher's shard_map wrapper; here we only tag the intent so
+            # single-pod runs are unaffected.  See launch/train.py.
+            pass
+
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        lr = lr_fn(step)
+        params, opt_state = opt_update(grads, opt_state, params, lr)
+        out_metrics = {
+            "loss": loss.astype(jnp.float32),
+            "grad_norm": gnorm,
+            "lr": jnp.float32(lr),
+        }
+        return params, opt_state, out_metrics
+
+    return train_step, opt_init
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens, cfg)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cfg, max_len)
+
+    return prefill_step

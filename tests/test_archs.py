@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward/train step on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config, runnable_shapes
+from repro.models import lm
+
+ALL = sorted(ARCHS)
+
+
+def make_batch(cfg, b=2, s=32):
+    batch = {"tokens": jax.random.randint(jax.random.key(0), (b, s), 0, cfg.vocab)}
+    if cfg.frontend != "none" and cfg.family != "encdec":
+        batch["frontend_emb"] = jax.random.normal(
+            jax.random.key(1), (b, cfg.frontend_len, cfg.frontend_dim))
+    if cfg.family == "encdec":
+        batch["src_emb"] = jax.random.normal(
+            jax.random.key(1), (b, s, cfg.frontend_dim))
+    return batch
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_smoke_train_step(name):
+    cfg = get_smoke_config(name)
+    p = lm.init_lm(jax.random.key(0), cfg)
+    batch = make_batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(lm.lm_loss, has_aux=True)(
+        p, batch, cfg, jax.random.key(1))
+    assert loss.shape == ()
+    assert jnp.isfinite(loss)
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+    # quantization is ON in the smoke configs: loss near log(vocab) at init
+    assert 0.5 * jnp.log(cfg.vocab) < loss < 3.0 * jnp.log(cfg.vocab)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_smoke_decode_step(name):
+    cfg = get_smoke_config(name)
+    p = lm.init_lm(jax.random.key(0), cfg)
+    batch = make_batch(cfg, b=2, s=16)
+    logits, cache = lm.prefill(p, batch, cfg, max_len=32)
+    assert logits.shape == (2, cfg.vocab)
+    tok = jnp.argmax(logits, -1)[:, None]
+    logits2, cache2 = lm.decode_step(p, cache, tok, cfg)
+    assert logits2.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the exact assigned hyperparameters."""
+    q = get_config("qwen2-72b")
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab, q.qkv_bias) == (80, 8192, 64, 8, 29568, 152064, True)
+    y = get_config("yi-34b")
+    assert (y.n_layers, y.d_model, y.n_heads, y.n_kv_heads, y.d_ff, y.vocab) \
+        == (60, 7168, 56, 8, 20480, 64000)
+    m = get_config("moonshot-v1-16b-a3b")
+    assert (m.n_experts, m.top_k, m.moe_d_ff, m.vocab) == (64, 6, 1408, 163840)
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert (l4.n_experts, l4.top_k, l4.vocab, l4.d_model) == (16, 1, 202048, 5120)
+    mm = get_config("mamba2-370m")
+    assert (mm.n_layers, mm.d_model, mm.ssm_state, mm.vocab) == (48, 1024, 128, 50280)
+    z = get_config("zamba2-7b")
+    assert (z.n_layers, z.d_model, z.attn_every, z.ssm_state) == (81, 3584, 6, 64)
+    s = get_config("seamless-m4t-medium")
+    assert (s.enc_layers, s.n_layers, s.d_model, s.vocab) == (12, 12, 1024, 256206)
+    g3 = get_config("chatglm3-6b")
+    assert (g3.n_kv_heads, g3.rotary_pct, g3.d_ff, g3.vocab) == (2, 0.5, 13696, 65024)
+    g4 = get_config("glm4-9b")
+    assert (g4.n_layers, g4.vocab) == (40, 151552)
+    px = get_config("pixtral-12b")
+    assert (px.n_layers, px.d_model, px.frontend) == (40, 5120, "vision")
+
+
+def test_runnable_shapes_policy():
+    """long_500k only for sub-quadratic families (DESIGN.md §4)."""
+    for name, cfg in ARCHS.items():
+        shapes = {s.name for s in runnable_shapes(cfg)}
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= shapes
+
+
+def test_param_counts_plausible():
+    """n_params() roughly matches the marketing sizes."""
+    approx = {
+        "qwen2-72b": 72e9, "yi-34b": 34e9, "glm4-9b": 9e9,
+        "chatglm3-6b": 6e9, "pixtral-12b": 12e9, "zamba2-7b": 7e9,
+        "mamba2-370m": 370e6,
+    }
+    for name, target in approx.items():
+        n = get_config(name).n_params()
+        assert 0.5 * target < n < 1.8 * target, (name, n, target)

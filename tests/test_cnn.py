@@ -1,0 +1,100 @@
+"""Paper CNN zoo: smoke + op-count reproduction (Table I) + quantized
+training sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FMT_CIFAR, FMT_IMAGENET, QuantConfig
+from repro.data import make_cifar_iterator
+from repro.models.cnn import CNNConfig, apply_cnn, count_ops, init_cnn
+from repro.optim import sgdm_init, sgdm_update
+
+SMOKE = [
+    ("resnet20", 16, 0.5),
+    ("vgg16", 32, 0.25),  # vgg has 5 maxpools: needs hw >= 32
+    ("resnet34", 32, 0.25),
+]
+
+
+@pytest.mark.parametrize("arch,hw,wm", SMOKE)
+def test_cnn_smoke(arch, hw, wm):
+    cfg = CNNConfig(arch=arch, num_classes=10, width_mult=wm, in_hw=hw)
+    qcfg = QuantConfig(fmt=FMT_CIFAR)
+    p = init_cnn(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 3, hw, hw))
+
+    def loss(p):
+        logits = apply_cnn(p, x, cfg, qcfg, jax.random.key(2))
+        assert logits.shape == (2, 10)
+        return -jax.nn.log_softmax(logits)[:, 0].mean()
+
+    l, g = jax.value_and_grad(loss)(p)
+    assert jnp.isfinite(l)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+
+
+def test_table1_op_counts_resnet18():
+    """Paper Table I: ResNet-18 fwd conv ~1.88e9 MACs, FC 5.12e5, EW 7.53e5."""
+    ops = count_ops(CNNConfig(arch="resnet18", num_classes=1000, in_hw=224))
+    conv = sum(d["c_in"] * d["c_out"] * d["k"] ** 2 * d["h"] * d["w"]
+               for k, d in ops if k == "conv")
+    fc = sum(d["d_in"] * d["d_out"] * d["rows"] for k, d in ops if k == "fc")
+    ew = sum(d["numel"] for k, d in ops if k == "ew_add")
+    assert abs(conv - 1.88e9) / 1.88e9 < 0.06
+    assert fc == 512_000
+    assert abs(ew - 7.53e5) / 7.53e5 < 0.01  # paper rounds to 7.53e5
+
+
+def test_table1_op_counts_googlenet():
+    ops = count_ops(CNNConfig(arch="googlenet", num_classes=1000, in_hw=224))
+    conv = sum(d["c_in"] * d["c_out"] * d["k"] ** 2 * d["h"] * d["w"]
+               for k, d in ops if k == "conv")
+    assert abs(conv - 1.58e9) / 1.58e9 < 0.03
+
+
+def test_first_and_last_layer_unquantized():
+    """Paper Sec. VI-A: stem conv and classifier never quantize."""
+    cfg = CNNConfig(arch="resnet20", num_classes=10, width_mult=0.25, in_hw=16)
+    from repro.models import nn as nnlib
+
+    with nnlib.OpTrace() as tr:
+        p = jax.eval_shape(lambda k: init_cnn(k, cfg), jax.random.key(0))
+        p = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p)
+        jax.eval_shape(
+            lambda x: apply_cnn(p, x, cfg, QuantConfig(fmt=FMT_CIFAR),
+                                jax.random.key(1)),
+            jax.ShapeDtypeStruct((1, 3, 16, 16), jnp.float32),
+        )
+    convs = [d for k, d in tr.ops if k == "conv"]
+    fcs = [d for k, d in tr.ops if k == "fc"]
+    assert convs[0]["quantized"] is False  # stem
+    assert all(c["quantized"] for c in convs[1:])
+    assert fcs[-1]["quantized"] is False  # classifier
+
+
+def test_quantized_cnn_training_decreases_loss():
+    cfg = CNNConfig(arch="resnet20", num_classes=10, width_mult=0.25, in_hw=16)
+    qcfg = QuantConfig(fmt=FMT_IMAGENET)
+    params = init_cnn(jax.random.key(0), cfg)
+    opt = sgdm_init(params)
+    nxt, ds = make_cifar_iterator(batch=16, hw=16)
+
+    @jax.jit
+    def step(params, opt, batch, i):
+        def loss_fn(p):
+            logits = apply_cnn(p, batch["image"], cfg, qcfg,
+                               jax.random.fold_in(jax.random.key(9), i))
+            ll = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(ll, batch["label"][:, None], 1).mean()
+
+        l, g = jax.value_and_grad(loss_fn)(params)
+        params, opt = sgdm_update(g, opt, params, lr=0.05)
+        return params, opt, l
+
+    losses = []
+    for i in range(12):
+        batch, ds = nxt(ds)
+        params, opt, l = step(params, opt, batch, i)
+        losses.append(float(l))
+    assert losses[-1] < losses[0] - 0.4, losses

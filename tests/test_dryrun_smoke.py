@@ -1,0 +1,64 @@
+"""End-to-end dry-run smoke: one real cell compiled on the 512-device
+production mesh in a subprocess (keeps this process at 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+_SCRIPT = r"""
+from repro.launch.dryrun import run_cell
+r = run_cell("mamba2-370m", "long_500k", multi_pod=True, out_dir="/tmp/dryrun_test",
+             tag="smoke", verbose=False)
+assert r["hlo"]["coll_bytes"] > 0
+assert r["roofline"]["bottleneck"] in ("compute", "memory", "collective")
+print("CELL_OK", r["mesh"], r["roofline"]["bottleneck"])
+"""
+
+
+def test_dryrun_cell_compiles_multipod():
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
+             "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert "CELL_OK 2x16x16" in r.stdout, (r.stdout[-2000:], r.stderr[-2000:])
+    rec = json.load(open("/tmp/dryrun_test/mamba2-370m_long_500k_2x16x16_smoke.json"))
+    assert rec["n_devices"] == 512
+    assert rec["memory_analysis"]["temp_bytes"] is not None
+
+
+def test_sp_rules_preserve_semantics():
+    """Sequence-parallel rules are a layout change only: loss identical (up
+    to fp reassociation) on a 4-device mesh vs unsharded."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses, jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.parallel import axis_rules
+from repro.parallel.sharding import SP_RULES
+
+cfg = dataclasses.replace(get_smoke_config("glm4-9b"), quant=False,
+                          n_heads=4, n_kv_heads=4)
+p = lm.init_lm(jax.random.key(0), cfg)
+batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)}
+l0, _ = lm.lm_loss(p, batch, cfg, None)
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+with mesh, axis_rules(SP_RULES, mesh):
+    l1, _ = jax.jit(lambda p, b: lm.lm_loss(p, b, cfg, None))(p, batch)
+err = abs(float(l0) - float(l1))
+assert err < 1e-4, (float(l0), float(l1))
+print("SP_OK", err)
+"""
+    r = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
+             "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert "SP_OK" in r.stdout, (r.stdout[-2000:], r.stderr[-2000:])

@@ -1,0 +1,83 @@
+"""Low-bit training op semantics (paper Alg. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FMT_IMAGENET, QuantConfig, lowbit_conv, lowbit_matmul
+
+
+def _cos(a, b):
+    a, b = a.reshape(-1), b.reshape(-1)
+    return float((a @ b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+
+
+def test_matmul_grads_track_fp32():
+    cfg = QuantConfig(fmt=FMT_IMAGENET)
+    x = jax.random.normal(jax.random.key(0), (8, 64, 256))
+    w = jax.random.normal(jax.random.key(1), (256, 128)) * 0.05
+    f = lambda x, w: (lowbit_matmul(x, w, jax.random.key(2), cfg) ** 2).sum()
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    fr = lambda x, w: ((x @ w) ** 2).sum()
+    gxr, gwr = jax.grad(fr, argnums=(0, 1))(x, w)
+    assert _cos(gx, gxr) > 0.99
+    assert _cos(gw, gwr) > 0.99
+
+
+def test_conv_grads_track_fp32():
+    cfg = QuantConfig(fmt=FMT_IMAGENET)
+    x = jax.random.normal(jax.random.key(3), (2, 8, 12, 12))
+    w = jax.random.normal(jax.random.key(4), (12, 8, 3, 3)) * 0.1
+    f = lambda x, w: (lowbit_conv(x, w, jax.random.key(5), (1, 1), "SAME", cfg) ** 2).sum()
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+
+    def conv(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+    fr = lambda x, w: (conv(x, w) ** 2).sum()
+    gxr, gwr = jax.grad(fr, argnums=(0, 1))(x, w)
+    assert _cos(gx, gxr) > 0.99
+    assert _cos(gw, gwr) > 0.99
+
+
+def test_disabled_equals_fp32():
+    cfg = QuantConfig(fmt=FMT_IMAGENET, enabled=False)
+    x = jax.random.normal(jax.random.key(0), (16, 32))
+    w = jax.random.normal(jax.random.key(1), (32, 8))
+    np.testing.assert_allclose(
+        np.asarray(lowbit_matmul(x, w, None, cfg)), np.asarray(x @ w),
+        rtol=1e-6)
+
+
+def test_bf16_compute_is_exact():
+    """Tensor-scale factoring makes the bf16 GEMM bit-identical to fp32
+    (paper Sec. V-B applied to the MXU)."""
+    x = jax.random.normal(jax.random.key(0), (64, 256))
+    w = jax.random.normal(jax.random.key(1), (256, 64)) * 0.02
+    y32 = lowbit_matmul(x, w, None, QuantConfig(fmt=FMT_IMAGENET, stochastic=False))
+    ybf = lowbit_matmul(x, w, None, QuantConfig(
+        fmt=FMT_IMAGENET, stochastic=False, compute_dtype=jnp.bfloat16))
+    np.testing.assert_array_equal(np.asarray(y32), np.asarray(ybf))
+
+
+def test_stochastic_rounding_varies_with_key():
+    cfg = QuantConfig(fmt=FMT_IMAGENET)
+    x = jax.random.normal(jax.random.key(0), (32, 128))
+    w = jax.random.normal(jax.random.key(1), (128, 32))
+    y1 = lowbit_matmul(x, w, jax.random.key(10), cfg)
+    y2 = lowbit_matmul(x, w, jax.random.key(11), cfg)
+    y1b = lowbit_matmul(x, w, jax.random.key(10), cfg)
+    assert np.any(np.asarray(y1) != np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y1b))
+
+
+def test_cotangent_dtypes_match_primals():
+    cfg = QuantConfig(fmt=FMT_IMAGENET, compute_dtype=jnp.bfloat16)
+    x = jax.random.normal(jax.random.key(0), (16, 64), jnp.bfloat16)
+    w = jax.random.normal(jax.random.key(1), (64, 16))
+    gx, gw = jax.grad(
+        lambda x, w: lowbit_matmul(x, w, None, cfg).sum(), argnums=(0, 1)
+    )(x, w)
+    assert gx.dtype == jnp.bfloat16
+    assert gw.dtype == jnp.float32

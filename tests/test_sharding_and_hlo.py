@@ -1,0 +1,109 @@
+"""Sharding-spec inference and the HLO analysis used by the roofline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo_analysis import analyze_hlo, split_computations
+from repro.parallel import DEFAULT_RULES
+from repro.parallel.specs import logical_axes_for, spec_for
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (16, 16)
+        size = 256
+
+
+def test_logical_axes_rules():
+    assert logical_axes_for("['emb']", 2) == ("vocab", "fsdp")
+    assert logical_axes_for("['layers']['attn']['wq']['w']", 3) == \
+        ("stage", "fsdp", "heads")
+    assert logical_axes_for("['layers']['attn']['wq']['b']", 2) == \
+        ("stage", "heads")
+    assert logical_axes_for("['layers']['moe']['w_down']", 4) == \
+        ("stage", "expert", None, "fsdp")
+    assert logical_axes_for("['layers']['mlp']['w_down']['w']", 3) == \
+        ("stage", "mlp", "fsdp")
+    assert logical_axes_for("['final_norm']['gamma']", 1) == (None,)
+
+
+def test_spec_divisibility_fallback():
+    mesh = FakeMesh()
+    # kv_heads = 8 not divisible by model=16 -> replicated on that dim
+    s = spec_for("['layers']['attn']['wk']['w']", (80, 8192, 1024), mesh,
+                 DEFAULT_RULES)
+    assert s == P(None, "data", "model")
+    s2 = spec_for("['layers']['attn']['wk']['w']", (80, 8191, 1024), mesh,
+                  DEFAULT_RULES)
+    assert s2 == P(None, None, "model")  # 8191 not divisible by 16
+
+
+CANNED_HLO = """
+HloModule test
+
+%cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %w = f32[8,8] get-tuple-element(%p), index=1
+  %dot.1 = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%dot.1), replica_groups=[16,16]<=[256], to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %init = (s32[], f32[8,8]) tuple(s32[] constant(0), %a)
+  %w1 = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%body.1
+  %ag = f32[128,8]{1,0} all-gather(%a), replica_groups=[16,16]<=[256], dimensions={0}
+  ROOT %out = f32[8,8] get-tuple-element(%w1), index=1
+}
+"""
+
+
+def test_hlo_parser_canned():
+    res = analyze_hlo(CANNED_HLO)
+    # dot: 2*8*8*8 = 1024 flops, x12 loop trips
+    assert res["dot_flops"] == 12 * 1024
+    # all-reduce in loop: 2 * 256B * 15/16 * 12; all-gather once: 4096B*15/16
+    ar = 2 * (8 * 8 * 4) * 15 / 16 * 12
+    ag = (128 * 8 * 4) * 15 / 16
+    assert np.isclose(res["coll_breakdown"]["all-reduce"], ar)
+    assert np.isclose(res["coll_breakdown"]["all-gather"], ag)
+
+
+def test_hlo_parser_on_real_compiled_program():
+    """Single-device compiled scan: dot flops must be trip-multiplied."""
+    def f(x, w):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    txt = (
+        jax.jit(f)
+        .lower(jax.ShapeDtypeStruct((16, 32), jnp.float32),
+               jax.ShapeDtypeStruct((5, 32, 32), jnp.float32))
+        .compile()
+        .as_text()
+    )
+    res = analyze_hlo(txt)
+    assert res["dot_flops"] == 5 * 2 * 16 * 32 * 32, res["dot_flops"]
+
+
+def test_known_trip_count_preferred():
+    comps = split_computations(CANNED_HLO)
+    assert {"cond.1", "body.1", "main"} <= set(comps)
