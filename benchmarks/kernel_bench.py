@@ -1,12 +1,25 @@
 """Pallas kernel micro-benchmarks (interpret mode on CPU: correctness-grade
-timings, structural not wall-clock-representative of TPU)."""
+timings, structural not wall-clock-representative of TPU).
+
+Runs inside the ``benchmarks/run.py`` CSV driver, or standalone with a JSON
+artifact for the CI perf trail::
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py --json BENCH_kernels.json
+"""
+import argparse
+import json
+import platform
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import FMT_IMAGENET, QuantConfig, lowbit_matmul
-from repro.kernels import lowbit_matmul_fused, mls_quantize_pallas
+from repro.core import FMT_IMAGENET, QuantConfig, lowbit_conv, lowbit_matmul
+from repro.kernels import (
+    lowbit_conv_fused,
+    lowbit_matmul_fused,
+    mls_quantize_pallas,
+)
 
 
 def _time(f, *args, n=3):
@@ -31,4 +44,54 @@ def run(quick: bool = True):
     rows.append(("kernel/lowbit_matmul_fakequant_jit", us, "XLA-fused reference"))
     us = _time(jax.jit(lambda a, b: a @ b), x, w)
     rows.append(("kernel/fp32_matmul_jit", us, "baseline"))
+
+    # conv backends: quantized-domain Pallas im2col-GEMM vs fake-quant XLA
+    n, c, o, hw = (2, 16, 16, 8) if quick else (8, 32, 32, 16)
+    xc = jax.random.normal(jax.random.key(2), (n, c, hw, hw))
+    wc = jax.random.normal(jax.random.key(3), (o, c, 3, 3)) * 0.1
+    tag = f"{n}x{c}x{hw}x{hw}_o{o}k3"
+    cfg_p = QuantConfig(fmt=FMT_IMAGENET, stochastic=False, backend="pallas",
+                        k_block=32)
+    us = _time(
+        jax.jit(lambda a, b: lowbit_conv_fused(a, b, None, (1, 1), "SAME", cfg_p)),
+        xc, wc,
+    )
+    rows.append((f"kernel/lowbit_conv_fused_{tag}", us, "interpret-mode"))
+    us = _time(
+        jax.jit(lambda a, b: lowbit_conv(a, b, None, (1, 1), "SAME", cfg)),
+        xc, wc,
+    )
+    rows.append((f"kernel/lowbit_conv_fakequant_jit_{tag}", us,
+                 "XLA-fused reference"))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="larger shapes (still interpret mode off-TPU)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows as a BENCH_*.json artifact")
+    args = ap.parse_args()
+    rows = run(quick=not args.full)
+    for name, us, derived in rows:
+        print(f'{name},{us:.1f},"{derived}"', flush=True)
+    if args.json:
+        payload = {
+            "suite": "kernel_bench",
+            "unix_time": time.time(),
+            "backend": jax.default_backend(),
+            "machine": platform.machine(),
+            "quick": not args.full,
+            "rows": [
+                {"name": n, "us_per_call": round(us, 1), "derived": d}
+                for n, us, d in rows
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -72,12 +72,22 @@ def main():
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--hw", type=int, default=16)
     ap.add_argument("--width", type=float, default=0.5)
+    ap.add_argument("--backend", choices=["fake_quant", "pallas"],
+                    default="fake_quant",
+                    help="arithmetic for the quantized convs/GEMMs: fake-quant "
+                         "simulation or the quantized-domain Pallas kernels "
+                         "(interpret mode on CPU: slow, use tiny --steps)")
     args = ap.parse_args()
 
+    # the Pallas backend groups along im2col k-blocks; small blocks keep the
+    # reduced CPU shapes from being all padding
+    qkw = dict(backend=args.backend)
+    if args.backend == "pallas":
+        qkw["k_block"] = 32
     variants = [
         ("fp32", None),
-        ("mls<2,4>", QuantConfig(fmt=FMT_IMAGENET)),
-        ("mls<2,1>", QuantConfig(fmt=FMT_CIFAR)),
+        ("mls<2,4>", QuantConfig(fmt=FMT_IMAGENET, **qkw)),
+        ("mls<2,1>", QuantConfig(fmt=FMT_CIFAR, **qkw)),
     ]
     results = {}
     with tempfile.TemporaryDirectory() as td:

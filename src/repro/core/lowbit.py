@@ -57,6 +57,23 @@ class QuantConfig:
     # boundaries or XLA gathers the *unquantized* weight to form groups.
     # 1 = no alignment (single-host tests); production configs set 16.
     shard_ways: int = 1
+    # Which arithmetic executes the three training GEMMs/convs:
+    #   "fake_quant": quantize-dequantize + XLA conv/dot (GPU-style simulation)
+    #   "pallas":     quantized-domain Pallas kernels over the im2col/implicit
+    #                 GEMM lowering (kernels.lowbit_conv) — the paper's real
+    #                 low-bit arithmetic.  Grouping is always the k-block
+    #                 contraction-tile layout; `grouping` is ignored here.
+    backend: str = "fake_quant"
+    # Pallas execution mode: None = auto (Mosaic on TPU, interpreter on CPU);
+    # set explicitly to force either.
+    pallas_interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.backend not in ("fake_quant", "pallas"):
+            raise ValueError(
+                f"QuantConfig.backend must be 'fake_quant' or 'pallas', "
+                f"got {self.backend!r}"
+            )
 
     def _aligned_kb(self, k: int) -> int:
         if self.shard_ways > 1:

@@ -3,11 +3,33 @@
 * ``mls_quantize`` — fused dynamic quantization (paper Alg. 2)
 * ``mls_matmul``   — quantized-domain GEMM with exact intra-group integer
   accumulation and shift-add inter-group scaling (paper Eq. 6-8)
+* ``lowbit_conv``  — im2col/implicit-GEMM conv + matmul training ops with
+  all three GEMMs (fwd / wgrad / dgrad) in the quantized domain (Alg. 1)
 * ``ops``          — jit'd public wrappers
 * ``ref``          — pure-jnp oracles used by the test suite
 """
 from .mls_quantize import mls_quantize_pallas
 from .mls_matmul import mls_matmul_pallas
 from .ops import lowbit_matmul_fused
+from .lowbit_conv import (
+    conv_fused_grads_ref,
+    lowbit_conv_fused,
+    lowbit_conv_fused_ref,
+    lowbit_matmul_qd,
+    matmul_qd_grads_ref,
+    matmul_qd_ref,
+    qd_gemm,
+)
 
-__all__ = ["mls_quantize_pallas", "mls_matmul_pallas", "lowbit_matmul_fused"]
+__all__ = [
+    "mls_quantize_pallas",
+    "mls_matmul_pallas",
+    "lowbit_matmul_fused",
+    "lowbit_conv_fused",
+    "lowbit_conv_fused_ref",
+    "conv_fused_grads_ref",
+    "lowbit_matmul_qd",
+    "matmul_qd_ref",
+    "matmul_qd_grads_ref",
+    "qd_gemm",
+]

@@ -1,0 +1,333 @@
+"""Quantized-domain low-bit convolution via im2col / implicit GEMM.
+
+This is the training hot path for paper Alg. 1 running on the **real**
+quantized-domain Pallas pipeline (``mls_quantize_pallas`` ->
+``mls_matmul_pallas``) instead of fake-quant + ``lax.conv``.  All three
+training convolutions are lowered to MLS GEMMs over the im2col layout:
+
+    forward : Z  = Cols(qA) @ qW            (Alg. 1 l.4)
+    wgrad   : G  = Cols(qA)^T @ qE          (Alg. 1 l.13)
+    dgrad   : dA = col2im(qE @ qW^T), STE   (Alg. 1 l.15-16)
+
+Each GEMM dynamically quantizes its operands with scaling groups of
+``k_block`` elements **along its own contraction axis**, so group boundaries
+coincide with the GEMM's VMEM contraction tiles (the matmul analogue of the
+paper's (n, c) conv grouping; the contraction axis plays the role of the
+input channel).  That means the three GEMMs use three different group
+layouts of the same logical operands — the per-GEMM dynamic-quantization
+cost the paper budgets in Alg. 1.
+
+Every function here is written against an abstract (quantize, matmul)
+backend pair.  ``lowbit_conv_fused`` binds the Pallas kernels;
+``lowbit_conv_fused_ref`` / ``conv_fused_grads_ref`` bind the pure-jnp
+oracles from :mod:`repro.kernels.ref` through the *same* layout/padding
+code, so kernel-vs-oracle tests assert bit-identical outputs and gradients.
+
+Known scope limits (tracked in ROADMAP): im2col is materialized (a fused
+implicit-GEMM walk of the activation is the follow-up), and the scaling
+grouping is always the k-block "nc" analogue regardless of
+``QuantConfig.grouping``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import EMFormat, GS_FMT_DEFAULT
+from repro.core.lowbit import QuantConfig, _maybe_key
+from .mls_matmul import mls_matmul_pallas
+from .mls_quantize import mls_quantize_pallas
+from .ref import mls_matmul_ref, quantize_ref
+
+__all__ = [
+    "qd_gemm",
+    "lowbit_conv_fused",
+    "lowbit_conv_fused_ref",
+    "conv_fused_grads_ref",
+    "lowbit_matmul_qd",
+    "matmul_qd_ref",
+    "matmul_qd_grads_ref",
+]
+
+
+# ---------------------------------------------------------------------------
+# Backend: (quantize, matmul) implementation pair
+# ---------------------------------------------------------------------------
+class QDBackend(NamedTuple):
+    """A quantized-domain GEMM implementation.
+
+    ``quantize(x2d, fmt, k_block, gs_fmt, key, block_m, interpret)``
+        -> (codes u8 (M, K), s_g f32 (M, K/kb), s_t f32 scalar)
+    ``matmul(xc, xsg, xst, wc, wsg, wst, fmt, k_block, bm, bn, interpret)``
+        -> f32 (M, N)
+    """
+
+    quantize: Callable
+    matmul: Callable
+
+
+def _pallas_quantize(x2d, fmt, k_block, gs_fmt, key, block_m, interpret):
+    return mls_quantize_pallas(
+        x2d, fmt, k_block, gs_fmt, key, block_m=block_m, interpret=interpret
+    )
+
+
+def _pallas_matmul(xc, xsg, xst, wc, wsg, wst, fmt, k_block, bm, bn, interpret):
+    return mls_matmul_pallas(
+        xc, xsg, xst, wc, wsg, wst, fmt,
+        k_block=k_block, block_m=bm, block_n=bn, interpret=interpret,
+    )
+
+
+def _ref_quantize(x2d, fmt, k_block, gs_fmt, key, block_m, interpret):
+    # mirror the kernel's stochastic-rounding source exactly: uint8 draws
+    # from `key`, and the r = 127 (~nearest) constant when key is None.
+    if key is None:
+        r_u8 = jnp.full(x2d.shape, 127, dtype=jnp.uint8)
+    else:
+        r_u8 = jax.random.randint(key, x2d.shape, 0, 256, dtype=jnp.int32).astype(
+            jnp.uint8
+        )
+    return quantize_ref(x2d, fmt, k_block, gs_fmt=gs_fmt, r_u8=r_u8)
+
+
+def _ref_matmul(xc, xsg, xst, wc, wsg, wst, fmt, k_block, bm, bn, interpret):
+    return mls_matmul_ref(xc, xsg, xst, wc, wsg, wst, fmt, k_block)
+
+
+PALLAS_BACKEND = QDBackend(_pallas_quantize, _pallas_matmul)
+REF_BACKEND = QDBackend(_ref_quantize, _ref_matmul)
+
+
+def _interpret(cfg: QuantConfig) -> bool:
+    """Pallas interpret mode: Mosaic on TPU, interpreter everywhere else."""
+    if cfg.pallas_interpret is not None:
+        return cfg.pallas_interpret
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Core quantized-domain GEMM with padding to tile/group multiples
+# ---------------------------------------------------------------------------
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def qd_gemm(
+    x2d: jax.Array,
+    w2d: jax.Array,
+    key_x: Optional[jax.Array],
+    key_w: Optional[jax.Array],
+    *,
+    fmt: EMFormat,
+    gs_fmt: EMFormat = GS_FMT_DEFAULT,
+    k_block: int = 128,
+    block_m: int = 128,
+    block_n: int = 128,
+    backend: QDBackend = PALLAS_BACKEND,
+    interpret: bool = True,
+) -> jax.Array:
+    """Dynamically quantize ``x (M,K)`` / ``w (K,N)`` and contract.
+
+    Both operands are zero-padded to tile/group multiples (exact: padded
+    codes are 0 so their products vanish, and zero rows/columns are cropped
+    from the output).  The weight operand is quantized transposed so its
+    scaling groups run along K, then its codes/scales are transposed into
+    the (K, N) layout the GEMM consumes.
+    """
+    M, K = x2d.shape
+    K2, N = w2d.shape
+    assert K == K2, (x2d.shape, w2d.shape)
+    xp = _pad_to(x2d.astype(jnp.float32), block_m, k_block)
+    wp = _pad_to(w2d.astype(jnp.float32), k_block, block_n)
+    xc, xsg, xst = backend.quantize(
+        xp, fmt, k_block, gs_fmt, key_x, block_m, interpret
+    )
+    wc, wsgT, wst = backend.quantize(
+        wp.T, fmt, k_block, gs_fmt, key_w, block_n, interpret
+    )
+    y = backend.matmul(
+        xc, xsg, xst, wc.T, wsgT.T, wst, fmt, k_block, block_m, block_n,
+        interpret,
+    )
+    return y[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# im2col layout
+# ---------------------------------------------------------------------------
+def _im2col(x: jax.Array, ksize: Tuple[int, int], stride, padding):
+    """NCHW -> (N*OH*OW, C*kh*kw) patch matrix (+ output spatial dims).
+
+    Feature order is (c, kh, kw), matching ``w.reshape(O, C*kh*kw)`` of an
+    OIHW weight, so conv == cols @ w_mat.T.
+    """
+    p = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32), ksize, stride, padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    n, ckk, oh, ow = p.shape
+    return p.transpose(0, 2, 3, 1).reshape(n * oh * ow, ckk), (n, oh, ow)
+
+
+def _col2im(dcols: jax.Array, x_shape, ksize, stride, padding, out_hw):
+    """Exact transpose of :func:`_im2col` (scatter-add of patch cotangents)."""
+    n, oh, ow = out_hw
+    ckk = dcols.shape[1]
+    dpatch = dcols.reshape(n, oh, ow, ckk).transpose(0, 3, 1, 2)
+
+    def patches(a):
+        return jax.lax.conv_general_dilated_patches(
+            a, ksize, stride, padding,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+
+    transpose = jax.linear_transpose(
+        patches, jax.ShapeDtypeStruct(x_shape, jnp.float32)
+    )
+    (dx,) = transpose(dpatch)
+    return dx
+
+
+# ---------------------------------------------------------------------------
+# Fused conv: forward and backward pipelines (backend-parameterized)
+# ---------------------------------------------------------------------------
+def _gemm_kwargs(cfg: QuantConfig, backend: QDBackend):
+    return dict(
+        fmt=cfg.fmt, gs_fmt=cfg.gs_fmt, k_block=cfg.k_block,
+        backend=backend, interpret=_interpret(cfg),
+    )
+
+
+def _conv_fwd_impl(x, w, key, stride, padding, cfg, backend):
+    o = w.shape[0]
+    cols, (n, oh, ow) = _im2col(x, w.shape[2:], stride, padding)
+    wmat = w.reshape(o, -1).T.astype(jnp.float32)  # (C*kh*kw, O)
+    y2d = qd_gemm(
+        cols, wmat, _maybe_key(key, cfg, 0), _maybe_key(key, cfg, 1),
+        **_gemm_kwargs(cfg, backend),
+    )
+    return y2d.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+
+
+def _conv_bwd_impl(x, w, g, key, stride, padding, cfg, backend):
+    o = w.shape[0]
+    ksize = w.shape[2:]
+    cols, (n, oh, ow) = _im2col(x, ksize, stride, padding)
+    e2d = g.transpose(0, 2, 3, 1).reshape(-1, o).astype(jnp.float32)
+    wmat = w.reshape(o, -1).astype(jnp.float32)  # (O, C*kh*kw)
+    kw = _gemm_kwargs(cfg, backend)
+    # G = Cols(qA)^T @ qE: contraction over the N*OH*OW patches (Alg. 1 l.13)
+    dwmat = qd_gemm(
+        cols.T, e2d, _maybe_key(key, cfg, 2), _maybe_key(key, cfg, 3), **kw
+    )  # (C*kh*kw, O)
+    dw = dwmat.T.reshape(w.shape)
+    # dA = qE @ qW^T: contraction over output channels, then col2im + STE
+    dcols = qd_gemm(
+        e2d, wmat, _maybe_key(key, cfg, 4), _maybe_key(key, cfg, 5), **kw
+    )  # (N*OH*OW, C*kh*kw)
+    dx = _col2im(dcols, x.shape, ksize, stride, padding, (n, oh, ow))
+    return dx, dw
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def lowbit_conv_fused(x, w, key, stride, padding, cfg: QuantConfig):
+    """NCHW conv running all three training GEMMs in the MLS quantized
+    domain through the Pallas kernels (paper Alg. 1 on real arithmetic).
+
+    ``x``: (N, C, H, W); ``w``: (O, C, kh, kw); ``stride`` a 2-tuple;
+    ``padding`` "SAME"/"VALID" or explicit pairs.  Output is fp32
+    (N, O, OH, OW).  Gradients follow Alg. 1 with STE: each backward GEMM
+    re-quantizes its operands from float in its own contraction-aligned
+    group layout.
+    """
+    return _conv_fwd_impl(x, w, key, stride, padding, cfg, PALLAS_BACKEND)
+
+
+def _lcf_fwd(x, w, key, stride, padding, cfg: QuantConfig):
+    y = _conv_fwd_impl(x, w, key, stride, padding, cfg, PALLAS_BACKEND)
+    return y, (x, w, key)
+
+
+def _lcf_bwd(stride, padding, cfg: QuantConfig, res, g):
+    x, w, key = res
+    dx, dw = _conv_bwd_impl(x, w, g, key, stride, padding, cfg, PALLAS_BACKEND)
+    return dx.astype(x.dtype), dw.astype(w.dtype), None
+
+
+lowbit_conv_fused.defvjp(_lcf_fwd, _lcf_bwd)
+
+
+def lowbit_conv_fused_ref(x, w, key, stride, padding, cfg: QuantConfig):
+    """jnp-oracle forward: same layout code, ref quantize/matmul."""
+    return _conv_fwd_impl(x, w, key, stride, padding, cfg, REF_BACKEND)
+
+
+def conv_fused_grads_ref(x, w, g, key, stride, padding, cfg: QuantConfig):
+    """jnp-oracle (dx, dw) for cotangent ``g`` (bit-exactness tests)."""
+    return _conv_bwd_impl(x, w, g, key, stride, padding, cfg, REF_BACKEND)
+
+
+# ---------------------------------------------------------------------------
+# Fused matmul with the same three-GEMM quantized-domain training semantics
+# ---------------------------------------------------------------------------
+def _mm_fwd_impl(x, w, key, cfg, backend):
+    x2d = x.reshape(-1, x.shape[-1])
+    y2d = qd_gemm(
+        x2d, w.astype(jnp.float32),
+        _maybe_key(key, cfg, 0), _maybe_key(key, cfg, 1),
+        **_gemm_kwargs(cfg, backend),
+    )
+    return y2d.reshape(*x.shape[:-1], w.shape[1])
+
+
+def _mm_bwd_impl(x, w, g, key, cfg, backend):
+    x2d = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    e2d = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    kw = _gemm_kwargs(cfg, backend)
+    # dX = qE @ qW^T (contraction over output features)
+    dx2d = qd_gemm(
+        e2d, w.astype(jnp.float32).T,
+        _maybe_key(key, cfg, 2), _maybe_key(key, cfg, 3), **kw,
+    )
+    # dW = qX^T @ qE (contraction over rows)
+    dw = qd_gemm(
+        x2d.T, e2d, _maybe_key(key, cfg, 4), _maybe_key(key, cfg, 5), **kw
+    )
+    return dx2d.reshape(x.shape), dw
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def lowbit_matmul_qd(x, w, key, cfg: QuantConfig):
+    """``x (..., K) @ w (K, N)`` with all three training GEMMs in the MLS
+    quantized domain (Pallas kernels) — the linear-layer analogue of
+    :func:`lowbit_conv_fused`."""
+    return _mm_fwd_impl(x, w, key, cfg, PALLAS_BACKEND)
+
+
+def _lmq_fwd(x, w, key, cfg: QuantConfig):
+    return _mm_fwd_impl(x, w, key, cfg, PALLAS_BACKEND), (x, w, key)
+
+
+def _lmq_bwd(cfg: QuantConfig, res, g):
+    x, w, key = res
+    dx, dw = _mm_bwd_impl(x, w, g, key, cfg, PALLAS_BACKEND)
+    return dx.astype(x.dtype), dw.astype(w.dtype), None
+
+
+lowbit_matmul_qd.defvjp(_lmq_fwd, _lmq_bwd)
+
+
+def matmul_qd_ref(x, w, key, cfg: QuantConfig):
+    return _mm_fwd_impl(x, w, key, cfg, REF_BACKEND)
+
+
+def matmul_qd_grads_ref(x, w, g, key, cfg: QuantConfig):
+    return _mm_bwd_impl(x, w, g, key, cfg, REF_BACKEND)

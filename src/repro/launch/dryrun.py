@@ -144,6 +144,8 @@ def run_cell(
         "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 returns one dict per program
+        ca = ca[0] if ca else {}
     record["cost_analysis"] = {
         "flops_raw": float(ca.get("flops", 0.0)),
         "bytes_accessed_raw": float(ca.get("bytes accessed", 0.0)),

@@ -179,11 +179,23 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
             # ---- dots -----------------------------------------------------
             if " dot(" in rhs or rhs.startswith("dot("):
                 out_dims = _shape_dims(rhs)
-                ops = re.search(r"dot\(\s*%?([\w\.\-]+),\s*%?([\w\.\-]+)", rhs)
                 cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                # lhs shape: newer XLA prints operand types inline
+                # (``dot(f32[16,32]{1,0} %var, ...)``); otherwise resolve the
+                # operand name against the computation's defs.
+                inner = rhs.split("dot(", 1)[1]
+                tm = re.match(r"\s*(\w+)\[([\d,]*)\]", inner)
+                if tm:
+                    lhs_dims = [int(d) for d in tm.group(2).split(",") if d]
+                else:
+                    ops = re.match(r"\s*%?([\w\.\-]+)", inner)
+                    lhs_dims = (
+                        _shape_dims(comp.defs[ops.group(1)])
+                        if ops and ops.group(1) in comp.defs
+                        else []
+                    )
                 k = 1
-                if ops and cdims and ops.group(1) in comp.defs:
-                    lhs_dims = _shape_dims(comp.defs[ops.group(1)])
+                if cdims:
                     for d in cdims.group(1).split(","):
                         if d and int(d) < len(lhs_dims):
                             k *= lhs_dims[int(d)]

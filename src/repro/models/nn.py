@@ -100,11 +100,18 @@ def linear(p, x, qcfg: Optional[QuantConfig] = None, key=None, wire=None):
         quantized=qcfg is not None and qcfg.enabled,
     )
     if qcfg is not None and qcfg.enabled:
-        if wire is not None and qcfg.wire_fsdp_dim != wire:
-            import dataclasses as _dc
+        if qcfg.backend == "pallas":
+            from repro.kernels import lowbit_matmul_qd
 
-            qcfg = _dc.replace(qcfg, wire_fsdp_dim=wire)
-        y = lowbit_matmul(x, p["w"].astype(jnp.float32), key, qcfg)
+            # quantized-domain path: the FSDP wire pinning is a fake-quant
+            # concern (the Pallas path already moves 1-byte codes).
+            y = lowbit_matmul_qd(x, p["w"].astype(jnp.float32), key, qcfg)
+        else:
+            if wire is not None and qcfg.wire_fsdp_dim != wire:
+                import dataclasses as _dc
+
+                qcfg = _dc.replace(qcfg, wire_fsdp_dim=wire)
+            y = lowbit_matmul(x, p["w"].astype(jnp.float32), key, qcfg)
     else:
         dt = x.dtype
         y = jax.lax.dot_general(
@@ -133,6 +140,10 @@ def conv2d(p, x, stride=1, padding="SAME", qcfg: Optional[QuantConfig] = None, k
         quantized=qcfg is not None and qcfg.enabled,
     )
     if qcfg is not None and qcfg.enabled:
+        if qcfg.backend == "pallas":
+            from repro.kernels import lowbit_conv_fused
+
+            return lowbit_conv_fused(x, p["w"], key, s, padding, qcfg)
         return lowbit_conv(x, p["w"], key, s, padding, qcfg)
     return jax.lax.conv_general_dilated(
         x, p["w"].astype(x.dtype), s, padding,

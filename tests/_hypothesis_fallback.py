@@ -1,0 +1,66 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+CI installs the real hypothesis (see pyproject `[dev]`); environments
+without it (e.g. a bare container) fall back to this shim so the property
+tests still run — each ``@given`` test executes a fixed number of
+deterministic pseudo-random examples instead of being skipped.
+
+Only the surface used by this test suite is implemented: ``given``,
+``settings(max_examples=..., deadline=...)``, ``strategies.integers`` and
+``strategies.sampled_from``.
+"""
+import random
+
+_MAX_EXAMPLES_CAP = 10  # keep the fallback fast; real hypothesis digs deeper
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+strategies = st = _Strategies()
+
+
+def settings(max_examples=_MAX_EXAMPLES_CAP, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        def run():
+            n = min(getattr(fn, "_max_examples", _MAX_EXAMPLES_CAP),
+                    _MAX_EXAMPLES_CAP)
+            rng = random.Random(0)
+            for _ in range(n):
+                fn(*(s.draw(rng) for s in strats))
+
+        # plain zero-arg wrapper on purpose: pytest must not see the wrapped
+        # signature, or it would treat the strategy params as fixtures
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+
+    return deco

@@ -1,9 +1,31 @@
 import os
+import random
 
 # Smoke tests and benches must see ONE device; only launch/dryrun.py forces
-# 512 placeholder devices (and only in its own process).
+# 512 placeholder devices (and only in its own process).  Pinning the
+# platform also keeps CI runs reproducible across runner hardware.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax
 
 jax.config.update("jax_enable_x64", False)
+jax.config.update("jax_default_prng_impl", "threefry2x32")
+
+import numpy as np
+import pytest
+
+try:  # deterministic hypothesis profile for CI reproducibility
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", deadline=None, derandomize=True)
+    _hyp_settings.load_profile("ci")
+except ImportError:  # tests fall back to tests/_hypothesis_fallback
+    pass
+
+
+@pytest.fixture(autouse=True)
+def _deterministic_seeds():
+    """Fixed non-JAX PRNG seeds per test (JAX PRNG is already key-explicit)."""
+    random.seed(0)
+    np.random.seed(0)
+    yield

@@ -46,8 +46,8 @@ cfg = dataclasses.replace(get_smoke_config("glm4-9b"), quant=False,
 p = lm.init_lm(jax.random.key(0), cfg)
 batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)}
 l0, _ = lm.lm_loss(p, batch, cfg, None)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
 with mesh, axis_rules(SP_RULES, mesh):
     l1, _ = jax.jit(lambda p, b: lm.lm_loss(p, b, cfg, None))(p, batch)
 err = abs(float(l0) - float(l1))

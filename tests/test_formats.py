@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # CI installs hypothesis (pyproject [dev]); bare containers may lack it
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fixed-example fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     EMFormat, FMT_CIFAR, FMT_IMAGENET, GS_FMT_DEFAULT, GroupSpec,
