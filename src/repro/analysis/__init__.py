@@ -1,0 +1,18 @@
+"""Static quantization auditing: jaxpr coverage, numerics lint, HLO wire
+budgets.  CLI: ``python -m repro.analysis.audit --help``."""
+from .coverage import CoverageReport, Site, coverage_of_jaxpr, trace_coverage
+from .hlo_parser import analyze_hlo, computation_multipliers, split_computations
+from .lint import LintResult, check_format_pair, lint_quant_config
+
+__all__ = [
+    "CoverageReport",
+    "LintResult",
+    "Site",
+    "analyze_hlo",
+    "check_format_pair",
+    "computation_multipliers",
+    "coverage_of_jaxpr",
+    "lint_quant_config",
+    "split_computations",
+    "trace_coverage",
+]

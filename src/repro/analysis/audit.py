@@ -1,0 +1,184 @@
+"""Quantization-coverage audit CLI.
+
+Traces the CIFAR low-bit train step and/or the LM serve decode step (no
+execution — abstract inputs only), classifies every dot/conv MAC as
+quantized-domain vs full-precision vs data-movement, lints every shipped
+``QuantConfig`` for numerics legality, AOT-compiles the compressed gradient
+ring to audit its wire bytes, and writes a machine-readable
+``AUDIT_report.json``.  With ``--gate`` (the CI mode) the report is checked
+against the committed baseline in ``analysis/baselines/gate.json`` and the
+process exits non-zero on any regression.
+
+    PYTHONPATH=src python -m repro.analysis.audit --graph all --gate
+
+``--sabotage`` plants an fp32 GEMM on the train hot path — the negative
+control that must make the gate fail (exercised by the regression test).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+_BASELINE = pathlib.Path(__file__).parent / "baselines" / "gate.json"
+
+
+def _force_host_devices(n: int) -> None:
+    """Must run before JAX initializes its backend (lazy, so safe here as
+    long as no jax API touched devices yet in this process)."""
+    flag = f"--xla_force_host_platform_device_count={n}"
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in cur:
+        os.environ["XLA_FLAGS"] = f"{cur} {flag}".strip()
+
+
+def build_report(
+    graphs: tuple = ("train", "serve"),
+    backend: str = "pallas",
+    train_arch: str = "resnet20",
+    serve_arch: str = "qwen2-72b",
+    sabotage: bool = False,
+    wire: bool = True,
+) -> dict:
+    from repro.analysis.coverage import coverage_of_jaxpr
+    from repro.analysis.lint import lint_quant_config, lint_shipped_presets
+    from repro.analysis.graphs import cifar_train_graph, serve_decode_graph
+    from repro.core import FMT_CIFAR, QuantConfig
+
+    report: dict = {"version": 1, "graphs": {}}
+
+    built = []
+    if "train" in graphs:
+        g = cifar_train_graph(backend=backend, arch=train_arch,
+                              sabotage=sabotage)
+        built.append((g, QuantConfig(fmt=FMT_CIFAR, backend=backend,
+                                     pallas_interpret=True)))
+    if "serve" in graphs:
+        from repro.configs import get_smoke_config
+        import dataclasses
+
+        cfg = dataclasses.replace(get_smoke_config(serve_arch),
+                                  quant_backend=backend)
+        built.append((serve_decode_graph(backend=backend, arch=serve_arch),
+                      cfg.qcfg()))
+
+    for g, qcfg in built:
+        cov = coverage_of_jaxpr(g.jaxpr())
+        entry = {
+            **g.meta,
+            "coverage": cov.to_json(),
+            "lint": lint_quant_config(qcfg).to_json(),
+        }
+        report["graphs"][g.name] = entry
+
+    report["presets"] = {
+        arch: res.to_json() for arch, res in lint_shipped_presets().items()
+    }
+
+    if wire:
+        from repro.analysis.wire import audit_wire_ring
+
+        report["wire_ring"] = audit_wire_ring()
+
+    return report
+
+
+def apply_gate(report: dict, baseline: dict) -> list[str]:
+    """Returns the list of gate failures (empty = pass)."""
+    failures = []
+    for name, min_frac in baseline.get("min_quantized_fraction", {}).items():
+        entry = report["graphs"].get(name)
+        if entry is None:
+            continue  # graph not audited in this invocation
+        frac = entry["coverage"]["quantized_fraction"]
+        if frac < min_frac:
+            fp_sites = entry["coverage"]["full_precision_sites"]
+            culprit = fp_sites[0] if fp_sites else None
+            failures.append(
+                f"{name}: quantized fraction {frac:.4f} < {min_frac} "
+                f"(largest fp32 site: {culprit})"
+            )
+    for name, entry in report["graphs"].items():
+        if not entry["lint"]["ok"]:
+            failures.append(f"{name}: lint errors {entry['lint']['errors']}")
+    for arch, res in report.get("presets", {}).items():
+        if not res["ok"]:
+            failures.append(f"preset {arch}: lint errors {res['errors']}")
+    wire = report.get("wire_ring")
+    min_ratio = baseline.get("min_wire_compression_ratio")
+    if wire is not None and min_ratio is not None:
+        if wire["compression_ratio"] < min_ratio:
+            failures.append(
+                f"wire ring: compression ratio "
+                f"{wire['compression_ratio']:.2f} < {min_ratio}"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--graph", choices=["train", "serve", "all"],
+                    default="all")
+    ap.add_argument("--backend", choices=["pallas", "fake_quant"],
+                    default="pallas")
+    ap.add_argument("--train-arch", default="resnet20")
+    ap.add_argument("--serve-arch", default="qwen2-72b")
+    ap.add_argument("--out", default="AUDIT_report.json")
+    ap.add_argument("--baseline", default=str(_BASELINE))
+    ap.add_argument("--gate", action="store_true",
+                    help="check against the baseline; exit 1 on regression")
+    ap.add_argument("--no-wire", action="store_true",
+                    help="skip the collective wire-byte audit")
+    ap.add_argument("--sabotage", action="store_true",
+                    help="plant an fp32 GEMM on the hot path (negative "
+                         "control; the gate must fail)")
+    args = ap.parse_args(argv)
+
+    _force_host_devices(2)
+
+    graphs = ("train", "serve") if args.graph == "all" else (args.graph,)
+    report = build_report(
+        graphs=graphs, backend=args.backend, train_arch=args.train_arch,
+        serve_arch=args.serve_arch, sabotage=args.sabotage,
+        wire=not args.no_wire,
+    )
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = apply_gate(report, baseline)
+    report["gate"] = {
+        "pass": not failures, "failures": failures,
+        "baseline": baseline, "enforced": bool(args.gate),
+    }
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    for name, entry in report["graphs"].items():
+        cov = entry["coverage"]
+        print(f"{name}: quantized {100 * cov['quantized_fraction']:.2f}% "
+              f"({cov['quantized_macs']:,} q / "
+              f"{cov['full_precision_macs']:,} fp / "
+              f"{cov['data_movement_macs']:,} dm MACs), "
+              f"lint {'OK' if entry['lint']['ok'] else 'FAIL'}")
+    if "wire_ring" in report:
+        w = report["wire_ring"]
+        print(f"wire ring: {w['compression_ratio']:.2f}x vs fp32 "
+              f"({w['wire_bytes_per_device']:.0f} B/device)")
+    if failures:
+        print("GATE FAILURES:", file=sys.stderr)
+        for fmsg in failures:
+            print(f"  - {fmsg}", file=sys.stderr)
+    else:
+        print("gate: PASS")
+    print(f"report written to {args.out}")
+    return 1 if (failures and args.gate) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,125 @@
+"""Auditable graphs: step functions paired with abstract (zero-allocation)
+inputs, ready for ``jax.make_jaxpr`` tracing by the coverage auditor.
+
+Two graph families:
+
+* ``cifar_train_graph`` — one full low-bit training step (loss, grads, SGD
+  update) of a paper CNN on CIFAR shapes, with all three training GEMMs per
+  conv routed through the configured backend.  ``sabotage=True`` plants an
+  fp32 ``dot_general`` on the hot path (folded into the loss so it cannot be
+  dead-code-eliminated) — the negative control proving the auditor and the
+  CI gate actually catch unquantized compute.
+* ``serve_decode_graph`` — one incremental decode step of a smoke-sized LM
+  against a filled cache, quantized matmuls on the chosen backend.
+
+All inputs are ``ShapeDtypeStruct``/``eval_shape`` abstractions — nothing is
+allocated or executed, so full-size graphs trace in seconds on any host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FMT_CIFAR, QuantConfig
+
+__all__ = ["AuditGraph", "cifar_train_graph", "serve_decode_graph"]
+
+
+@dataclasses.dataclass
+class AuditGraph:
+    name: str
+    fn: Any  # callable(*args)
+    args: tuple  # abstract inputs for jax.make_jaxpr
+    meta: dict
+
+    def jaxpr(self):
+        return jax.make_jaxpr(self.fn)(*self.args)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def cifar_train_graph(
+    backend: str = "pallas",
+    arch: str = "resnet20",
+    batch: int = 4,
+    width_mult: float = 1.0,
+    in_hw: int = 32,
+    sabotage: bool = False,
+) -> AuditGraph:
+    """Full CIFAR train step: cross-entropy loss -> grads -> SGD update.
+
+    ``batch`` does not change the quantized fraction (every site scales
+    linearly with it), so a small batch keeps tracing fast while the
+    reported coverage equals the production value.
+    """
+    from repro.models.cnn import CNNConfig, init_cnn, apply_cnn
+
+    cnn_cfg = CNNConfig(arch=arch, num_classes=10, width_mult=width_mult,
+                        in_hw=in_hw)
+    qcfg = QuantConfig(fmt=FMT_CIFAR, stochastic=True, backend=backend,
+                       pallas_interpret=True)
+
+    def train_step(params, x, y):
+        def loss_fn(p):
+            key = jax.random.key(0)
+            logits = apply_cnn(p, x, cnn_cfg, qcfg, key)
+            logp = jax.nn.log_softmax(logits)
+            loss = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+            if sabotage:
+                # An unquantized fp32 GEMM sneaked onto the hot path; the
+                # tiny weight keeps the loss value intact while the MACs
+                # stay in the traced graph (they feed the returned loss).
+                h = x.reshape(x.shape[0], -1)
+                loss = loss + 1e-12 * jnp.dot(h.T, h).sum()
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params = jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+        return loss, new_params
+
+    params = jax.eval_shape(lambda k: init_cnn(k, cnn_cfg), jax.random.key(0))
+    args = (
+        params,
+        _sds((batch, cnn_cfg.in_ch, in_hw, in_hw), jnp.float32),
+        _sds((batch,), jnp.int32),
+    )
+    return AuditGraph(
+        name=f"train:{arch}", fn=train_step, args=args,
+        meta={"kind": "train", "model": arch, "backend": backend,
+              "batch": batch, "in_hw": in_hw, "width_mult": width_mult,
+              "sabotage": sabotage},
+    )
+
+
+def serve_decode_graph(
+    backend: str = "pallas",
+    arch: str = "qwen2-72b",
+    batch: int = 4,
+    cache_len: int = 128,
+) -> AuditGraph:
+    """One LM decode step (smoke-sized config) against a filled cache."""
+    from repro.configs import ShapeConfig, get_smoke_config
+    from repro.launch.specs import abstract_params, batch_specs, cache_specs
+    from repro.models import lm
+
+    cfg = dataclasses.replace(get_smoke_config(arch), quant_backend=backend)
+    shape = ShapeConfig("decode_audit", cache_len, batch, "decode")
+
+    def decode(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens, cfg)
+
+    args = (
+        abstract_params(cfg),
+        cache_specs(cfg, shape),
+        batch_specs(cfg, shape)["tokens"],
+    )
+    return AuditGraph(
+        name=f"serve:{arch}", fn=decode, args=args,
+        meta={"kind": "serve", "model": arch, "backend": backend,
+              "batch": batch, "cache_len": cache_len},
+    )

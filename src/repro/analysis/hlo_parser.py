@@ -1,0 +1,275 @@
+"""Post-optimization HLO text parser (shared by the roofline dry-run and the
+quantization-coverage auditor).
+
+XLA's ``cost_analysis()`` counts a ``while`` body ONCE, but scan-over-layers
+puts ~all compute/collectives inside while bodies.  This parser:
+
+1. splits the compiled module into computations,
+2. finds every ``while``, reads its trip count from the loop-bound constant
+   in the *condition* computation, and propagates multipliers through nested
+   loops,
+3. sums **dot FLOPs** (operand shapes resolved within the computation,
+   bucketed by lhs dtype) and **collective wire bytes per device** (from
+   output shapes + replica group sizes, bucketed by payload dtype), each
+   scaled by its computation's multiplier.
+
+Wire-byte conventions (ring algorithms, per participating device):
+    all-gather        out_bytes * (g-1)/g
+    all-reduce        2 * out_bytes * (g-1)/g
+    reduce-scatter    out_bytes * (g-1)          (out = the local shard)
+    all-to-all        out_bytes * (g-1)/g
+    collective-permute  out_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = [
+    "analyze_hlo",
+    "split_computations",
+    "computation_multipliers",
+    "Computation",
+    "DTYPE_BYTES",
+]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+_DTYPE_BYTES = DTYPE_BYTES  # back-compat alias
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?(?:condition=%?([\w\.\-]+)).*?(?:body=%?([\w\.\-]+))"
+    r"|while\(.*?\).*?(?:body=%?([\w\.\-]+)).*?(?:condition=%?([\w\.\-]+))"
+)
+_CALLEE_RE = re.compile(r"(?:to_apply|calls|body|condition)=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dt, 4)
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.match(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: list[str]
+    defs: dict[str, str] = dataclasses.field(default_factory=dict)  # var -> type str
+
+
+def split_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    header = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^{]*)?\{\s*$")
+    instr = re.compile(r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=")
+    for line in hlo.splitlines():
+        if cur is None:
+            m = header.match(line.strip())
+            if m and not instr.match(line):
+                cur = Computation(m.group(1), [])
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        cur.lines.append(line)
+        dm = _DEF_RE.match(line)
+        if dm:
+            var, rhs = dm.groups()
+            sm = _SHAPE_RE.match(rhs.strip()) or _SHAPE_RE.match(
+                rhs.strip().lstrip("(")
+            )
+            if sm:
+                cur.defs[var] = rhs.strip().lstrip("(")
+    return comps
+
+
+_TRIP_RE = re.compile(r'known_trip_count":\{"n":"(\d+)"')
+
+
+def _loop_trip_count(while_line: str, cond: Computation | None) -> int:
+    """Prefer XLA's ``known_trip_count`` backend_config; fall back to the
+    loop-bound constant in the condition computation."""
+    m = _TRIP_RE.search(while_line)
+    if m:
+        return int(m.group(1))
+    if cond is None:
+        return 1
+    consts = [int(c) for line in cond.lines for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(comps: dict[str, Computation],
+                            entry: str) -> dict[str, float]:
+    """multiplier[c] = how many times computation c runs per step."""
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # iterate to fixpoint (call graph is a DAG; a few passes suffice)
+    for _ in range(12):
+        changed = False
+        for cname, comp in comps.items():
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for line in comp.lines:
+                if " while(" in line or "= while(" in line.replace("  ", " "):
+                    wm = _WHILE_RE.search(line)
+                    if not wm:
+                        continue
+                    cond = wm.group(1) or wm.group(4)
+                    body = wm.group(2) or wm.group(3)
+                    trips = _loop_trip_count(line, comps.get(cond))
+                    for callee, factor in ((body, trips), (cond, trips + 1)):
+                        if callee in comps:
+                            new = m * factor
+                            if new > mult.get(callee, 0.0):
+                                mult[callee] = new
+                                changed = True
+                else:
+                    for callee in _CALLEE_RE.findall(line):
+                        if callee in comps and m > mult.get(callee, 0.0):
+                            mult[callee] = m
+                            changed = True
+        if not changed:
+            break
+    return dict(mult)
+
+
+def _find_entry(hlo: str, comps: dict[str, Computation]) -> str:
+    if not comps:
+        return ""
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return max(comps, key=lambda c: len(comps[c].lines))
+
+
+def analyze_hlo(hlo: str) -> dict[str, float]:
+    """Returns {dot_flops, dot_flops_by_dtype, coll_bytes, per-collective
+    byte breakdown, n_collectives} — all per device, while-trip-corrected."""
+    comps = split_computations(hlo)
+    entry = _find_entry(hlo, comps)
+    mult = computation_multipliers(comps, entry)
+
+    dot_flops = 0.0
+    dot_by_dtype = defaultdict(float)
+    coll = defaultdict(float)
+    coll_count = defaultdict(int)
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for line in comp.lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rhs = dm.group(2).strip()
+            # ---- dots -----------------------------------------------------
+            if " dot(" in rhs or rhs.startswith("dot("):
+                out_dims = _shape_dims(rhs)
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                # lhs shape: newer XLA prints operand types inline
+                # (``dot(f32[16,32]{1,0} %var, ...)``); otherwise resolve the
+                # operand name against the computation's defs.
+                inner = rhs.split("dot(", 1)[1]
+                tm = re.match(r"\s*(\w+)\[([\d,]*)\]", inner)
+                if tm:
+                    lhs_dt = tm.group(1)
+                    lhs_dims = [int(d) for d in tm.group(2).split(",") if d]
+                else:
+                    ops = re.match(r"\s*%?([\w\.\-]+)", inner)
+                    lhs_def = (
+                        comp.defs.get(ops.group(1), "") if ops else ""
+                    )
+                    lhs_dims = _shape_dims(lhs_def)
+                    lm = _SHAPE_RE.match(lhs_def)
+                    lhs_dt = lm.group(1) if lm else "?"
+                k = 1
+                if cdims:
+                    for d in cdims.group(1).split(","):
+                        if d and int(d) < len(lhs_dims):
+                            k *= lhs_dims[int(d)]
+                out = 1
+                for d in out_dims:
+                    out *= d
+                dot_flops += m * 2.0 * out * k
+                dot_by_dtype[lhs_dt] += m * 2.0 * out * k
+                continue
+            # ---- collectives ----------------------------------------------
+            for cop in _COLLECTIVES:
+                if re.search(rf"\b{cop}(?:-start)?\(", rhs):
+                    if f"{cop}-done" in rhs:
+                        break
+                    out_bytes = _total_bytes(rhs)
+                    dt = (_SHAPE_RE.match(rhs.split("(", 1)[0]) or
+                          _SHAPE_RE.search(rhs.split("(", 1)[0]))
+                    dt = dt.group(1) if dt else "?"
+                    g = _group_size(rhs)
+                    if cop == "all-gather":
+                        b = out_bytes * (g - 1) / g
+                    elif cop == "all-reduce":
+                        b = 2.0 * out_bytes * (g - 1) / g
+                    elif cop == "reduce-scatter":
+                        b = out_bytes * (g - 1)
+                    elif cop == "all-to-all":
+                        b = out_bytes * (g - 1) / g
+                    else:  # collective-permute
+                        b = out_bytes
+                    coll[cop] += m * b
+                    coll[f"{cop}:{dt}"] += m * b
+                    coll_count[cop] += 1
+                    break
+
+    return {
+        "dot_flops": dot_flops,
+        "dot_flops_by_dtype": {k: float(v) for k, v in dot_by_dtype.items()},
+        "coll_bytes": float(sum(v for k, v in coll.items() if ":" not in k)),
+        "coll_breakdown": {k: float(v) for k, v in coll.items()},
+        "coll_counts": dict(coll_count),
+        "entry": entry,
+    }
+
+
+def _total_bytes(rhs: str) -> int:
+    """Output bytes of an instruction (tuples: sum of leaf shapes before the
+    op name)."""
+    head = rhs.split("(", 1)[0]
+    return sum(
+        _shape_bytes(f"{dt}[{dims}]")
+        for dt, dims in _SHAPE_RE.findall(head)
+    )
+
+
+def _group_size(rhs: str) -> int:
+    m = _GROUPS_IOTA_RE.search(rhs)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(rhs)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip() != ""]), 1)
+    return 2

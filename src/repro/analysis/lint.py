@@ -1,0 +1,147 @@
+"""Numerics legality lint for ``QuantConfig``/``EMFormat`` pairs.
+
+Static checks that a quantization configuration can execute *exactly* on the
+arithmetic the kernels assume — the invariants the module docstrings of
+``kernels/mls_matmul.py`` and ``core/quantize.py`` document but (until this
+lint) nothing verified:
+
+* **Accumulator exactness** — the quantized-domain GEMM accumulates integer
+  products in fp32, which is exact only below 2^24.  A product of two
+  ⟨E,M⟩ values spans ``product_bits = 2M + 2^(E+1) - 2`` bits and a scaling
+  group sums ``k_block`` of them, so we require
+  ``product_bits + ceil(log2(k_block)) < 24``.
+* **Code width** — packed codes (sign ⊕ exponent ⊕ mantissa) must fit the
+  uint8 wire/VMEM layout: ``1 + E + M <= 8``.
+* **Pallas tiling** — ``k_block`` is the contraction BlockSpec tile of
+  ``mls_matmul_pallas``; it must be a power of two in [16, 512] so group
+  boundaries can coincide with MXU/VMEM tiles, with a warning when it is not
+  a multiple of the 128-wide TPU lane.
+* **Grouping / group-scale format** — grouping spec must name a known
+  layout; the group-scale fraction must stay within the shift-add budget of
+  the inter-group combine (``Mg <= 2``: at most 3 shifted adds per scale).
+
+Everything here is pure Python on dataclass fields — safe to run in CI
+without an accelerator.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.formats import EMFormat, accumulation_bits
+from repro.core.lowbit import QuantConfig
+
+__all__ = [
+    "LintResult",
+    "check_format_pair",
+    "lint_quant_config",
+    "lint_shipped_presets",
+]
+
+_VALID_GROUPINGS = ("nc", "c", "n", "none")
+
+
+@dataclasses.dataclass
+class LintResult:
+    errors: list[str]
+    warnings: list[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def to_json(self) -> dict:
+        return {"ok": self.ok, "errors": self.errors,
+                "warnings": self.warnings}
+
+
+def check_format_pair(fmt: EMFormat, k_block: int) -> list[str]:
+    """Errors for an element format × accumulation depth pair."""
+    errors = []
+    if k_block < 1:
+        errors.append(f"k_block must be >= 1, got {k_block}")
+        return errors
+    acc = accumulation_bits(fmt, k_block)
+    if acc >= 24:
+        errors.append(
+            f"accumulating {k_block} products of {fmt} values needs {acc} "
+            f"integer bits (product_bits={fmt.product_bits} + "
+            f"ceil(log2(k_block))) >= 24: fp32 accumulation is no longer "
+            f"bit-exact — shrink k_block or the ⟨E,M⟩ format"
+        )
+    if fmt.element_bits > 8:
+        errors.append(
+            f"{fmt} needs {fmt.element_bits} storage bits per element; the "
+            f"packed code layout (sign|exp|man) is uint8 — max 8"
+        )
+    return errors
+
+
+def lint_quant_config(cfg: QuantConfig) -> LintResult:
+    """Full legality lint of one ``QuantConfig``."""
+    errors = list(check_format_pair(cfg.fmt, cfg.k_block))
+    warnings: list[str] = []
+
+    margin = 24 - accumulation_bits(cfg.fmt, cfg.k_block)
+    if 0 < margin <= 1:
+        warnings.append(
+            f"only {margin} bit of fp32 accumulator headroom for "
+            f"{cfg.fmt} × k_block={cfg.k_block}; a 2x deeper group would "
+            f"break exactness"
+        )
+
+    if cfg.grouping not in _VALID_GROUPINGS:
+        errors.append(
+            f"unknown grouping {cfg.grouping!r}; expected one of "
+            f"{_VALID_GROUPINGS}"
+        )
+
+    if cfg.gs_fmt.m > 2:
+        errors.append(
+            f"group-scale format {cfg.gs_fmt} has Mg={cfg.gs_fmt.m} > 2: the "
+            f"inter-group combine budgets <= 3 shifted adds per scale "
+            f"(paper Sec. V-B); use Mg in {{0, 1, 2}}"
+        )
+    if cfg.gs_fmt.e < 4:
+        warnings.append(
+            f"group-scale format {cfg.gs_fmt} spans scale ratios only down "
+            f"to 2^{cfg.gs_fmt.e_min}; groups quieter than that underflow to "
+            f"the denormal level"
+        )
+
+    if cfg.backend == "pallas":
+        kb = cfg.k_block
+        if kb & (kb - 1) != 0 or not (16 <= kb <= 512):
+            errors.append(
+                f"backend='pallas' needs a power-of-two k_block in "
+                f"[16, 512] (contraction BlockSpec tile), got {kb}"
+            )
+        elif kb % 128 != 0:
+            warnings.append(
+                f"k_block={kb} is not a multiple of the 128-wide TPU lane; "
+                f"Mosaic pads the contraction tile, wasting MXU occupancy"
+            )
+
+    if cfg.shard_ways < 1:
+        errors.append(f"shard_ways must be >= 1, got {cfg.shard_ways}")
+    if cfg.wire_fsdp_dim not in (None, 0, 1):
+        errors.append(
+            f"wire_fsdp_dim must be None, 0 or 1, got {cfg.wire_fsdp_dim}"
+        )
+    if cfg.packed_wire and cfg.wire_fsdp_dim is None:
+        warnings.append(
+            "packed_wire=True without wire_fsdp_dim: codes are packed but "
+            "not pinned to the FSDP shard axis, XLA may still gather fp32"
+        )
+
+    return LintResult(errors, warnings)
+
+
+def lint_shipped_presets() -> dict[str, LintResult]:
+    """Lint every QuantConfig reachable from the shipped model configs."""
+    from repro.configs import ARCHS, get_config
+
+    results: dict[str, LintResult] = {}
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        results[arch] = lint_quant_config(cfg.qcfg())
+    return results

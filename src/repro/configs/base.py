@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -45,7 +44,7 @@ class ModelConfig:
     # --- hybrid (Zamba2) ---
     attn_every: int = 0  # shared attention block every N layers (0 = off)
     # --- long-context ---
-    window: Optional[int] = None  # sliding window (long_500k mode for hybrid)
+    window: int | None = None  # sliding window (long_500k mode for hybrid)
     sub_quadratic: bool = False  # True for ssm/hybrid: long_500k cell runs
     # --- enc-dec ---
     enc_layers: int = 0  # >0 -> encoder-decoder (seamless)
@@ -63,6 +62,9 @@ class ModelConfig:
     # --- §Perf levers (beyond-paper; defaults = paper-faithful baseline) ---
     param_gather_dtype: str = "float32"  # bfloat16: halve FSDP gather bytes
     packed_wire: bool = False  # gather weights as packed MLS uint8 codes
+    # Arithmetic backing the quantized GEMMs: "fake_quant" (XLA simulation)
+    # or "pallas" (quantized-domain kernels) — see QuantConfig.backend.
+    quant_backend: str = "fake_quant"
 
     # ------------------------------------------------------------------
     @property
@@ -77,13 +79,14 @@ class ModelConfig:
     def ssm_heads(self) -> int:
         return self.d_inner // self.ssm_headdim
 
-    def qcfg(self) -> Optional[QuantConfig]:
+    def qcfg(self) -> QuantConfig | None:
         if not self.quant:
             return None
         return QuantConfig(
             fmt=self.fmt, gs_fmt=self.gs_fmt, grouping="nc", k_block=128,
             stochastic=True, compute_dtype=jnp.dtype(self.compute_dtype),
             packed_wire=self.packed_wire, shard_ways=16,
+            backend=self.quant_backend,
         )
 
     def n_params(self) -> int:

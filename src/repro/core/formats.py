@@ -17,6 +17,7 @@ there the fraction is *ceil*-rounded and the value may be exactly 1
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 
 import jax
@@ -28,6 +29,7 @@ __all__ = [
     "FMT_CIFAR",
     "FMT_IMAGENET",
     "GS_FMT_DEFAULT",
+    "accumulation_bits",
     "exponent_fraction",
     "srandom_like",
 ]
@@ -94,6 +96,16 @@ class EMFormat:
 
     def __str__(self) -> str:  # matches the paper's ⟨E,M⟩ notation
         return f"<{self.e},{self.m}>"
+
+
+def accumulation_bits(fmt: EMFormat, k_block: int) -> int:
+    """Integer bits spanned by a sum of ``k_block`` products of two ``fmt``
+    values: ``product_bits + ceil(log2(k_block))``.  The quantized-domain
+    GEMM accumulates in fp32, which is bit-exact only while this stays
+    below 24 (see ``kernels/mls_matmul.py``)."""
+    if k_block < 1:
+        raise ValueError(f"k_block must be >= 1, got {k_block}")
+    return fmt.product_bits + math.ceil(math.log2(k_block))
 
 
 # Paper's headline configurations (Table II).

@@ -19,12 +19,11 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .formats import EMFormat, FMT_IMAGENET, GS_FMT_DEFAULT
+from .formats import EMFormat, FMT_IMAGENET, GS_FMT_DEFAULT, accumulation_bits
 from .quantize import GroupSpec, fake_quant, mls_quantize
 
 __all__ = ["QuantConfig", "lowbit_matmul", "lowbit_conv", "quantize_operand"]
@@ -51,7 +50,7 @@ class QuantConfig:
     # Which weight dim is FSDP-sharded (0 for in-projections, 1 for
     # out-projections); None disables the wire pinning.  Set per-callsite by
     # the layer code (nn.linear(..., wire=...)).
-    wire_fsdp_dim: Optional[int] = None
+    wire_fsdp_dim: int | None = None
     # Contraction axes of the GEMM weights are FSDP-sharded this many ways in
     # the production mesh; scaling-group reshapes must align to the shard
     # boundaries or XLA gathers the *unquantized* weight to form groups.
@@ -66,13 +65,32 @@ class QuantConfig:
     backend: str = "fake_quant"
     # Pallas execution mode: None = auto (Mosaic on TPU, interpreter on CPU);
     # set explicitly to force either.
-    pallas_interpret: Optional[bool] = None
+    pallas_interpret: bool | None = None
 
     def __post_init__(self):
         if self.backend not in ("fake_quant", "pallas"):
             raise ValueError(
                 f"QuantConfig.backend must be 'fake_quant' or 'pallas', "
                 f"got {self.backend!r}"
+            )
+        if self.grouping not in ("nc", "c", "n", "none"):
+            raise ValueError(
+                f"QuantConfig.grouping must be one of 'nc'/'c'/'n'/'none', "
+                f"got {self.grouping!r}"
+            )
+        # Accumulator-exactness invariant (paper Sec. V-B / mls_matmul.py):
+        # a scaling group sums k_block products of product_bits-wide integers
+        # in fp32, which is bit-exact only below 2^24.  Refuse configs that
+        # would silently produce rounded sums.
+        acc = accumulation_bits(self.fmt, self.k_block)
+        if acc >= 24:
+            raise ValueError(
+                f"QuantConfig: accumulating k_block={self.k_block} products "
+                f"of {self.fmt} values spans {acc} integer bits "
+                f"(product_bits={self.fmt.product_bits} + "
+                f"ceil(log2(k_block))) >= 24, so fp32 accumulation is no "
+                f"longer exact integer arithmetic. Reduce k_block or use a "
+                f"narrower <E,M> format."
             )
 
     def _aligned_kb(self, k: int) -> int:
@@ -82,7 +100,7 @@ class QuantConfig:
                     return kb
         return min(self.k_block, k)
 
-    def matmul_specs(self, x_shape, w_shape) -> Tuple[GroupSpec, GroupSpec]:
+    def matmul_specs(self, x_shape, w_shape) -> tuple[GroupSpec, GroupSpec]:
         """Group specs for ``x @ w`` with x: (..., K), w: (K, N).
 
         The matmul analogue of the paper's conv grouping: the contraction
@@ -109,7 +127,7 @@ class QuantConfig:
             GroupSpec((kb, 1)),
         )
 
-    def conv_specs(self) -> Tuple[GroupSpec, GroupSpec]:
+    def conv_specs(self) -> tuple[GroupSpec, GroupSpec]:
         """Group specs for NCHW activations / OIHW weights (paper Sec. IV-B)."""
         if self.grouping == "none":
             return GroupSpec.per_tensor(4), GroupSpec.per_tensor(4)
@@ -120,7 +138,7 @@ class QuantConfig:
         return GroupSpec.conv_nc(), GroupSpec.conv_nc()
 
 
-def _maybe_key(key: Optional[jax.Array], cfg: QuantConfig, idx: int):
+def _maybe_key(key: jax.Array | None, cfg: QuantConfig, idx: int):
     if key is None or not cfg.stochastic:
         return None
     return jax.random.fold_in(key, idx)

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -52,9 +52,9 @@ class GroupSpec:
     blocks of every other axis).  ``None`` means "whole axis in one group".
     """
 
-    block: Tuple[Optional[int], ...]
+    block: tuple[int | None, ...]
 
-    def resolve(self, shape: Sequence[int]) -> Tuple[int, ...]:
+    def resolve(self, shape: Sequence[int]) -> tuple[int, ...]:
         if len(self.block) != len(shape):
             raise ValueError(f"GroupSpec rank {len(self.block)} != tensor rank {len(shape)}")
         out = []
@@ -68,7 +68,7 @@ class GroupSpec:
             out.append(b)
         return tuple(out)
 
-    def group_shape(self, shape: Sequence[int]) -> Tuple[int, ...]:
+    def group_shape(self, shape: Sequence[int]) -> tuple[int, ...]:
         return tuple(d // b for d, b in zip(shape, self.resolve(shape)))
 
     @staticmethod
@@ -81,7 +81,7 @@ class GroupSpec:
         return GroupSpec((1, 1) + (None,) * (rank - 2))
 
 
-def _split_axes(x: jax.Array, blocks: Tuple[int, ...]):
+def _split_axes(x: jax.Array, blocks: tuple[int, ...]):
     """Reshape (d0, d1, ...) -> (g0, b0, g1, b1, ...)."""
     new_shape = []
     for d, b in zip(x.shape, blocks):
@@ -138,7 +138,7 @@ def quantize_group_scale(s_gf: jax.Array, gs_fmt: EMFormat):
 def quantize_elements(
     x_f: jax.Array,
     fmt: EMFormat,
-    r: Optional[jax.Array] = None,
+    r: jax.Array | None = None,
 ):
     """Quantize normalized magnitudes in [0, 1] to the <E,M> grid.
 
@@ -265,9 +265,9 @@ class MLSTensor:
 def mls_quantize(
     x: jax.Array,
     fmt: EMFormat,
-    spec: Optional[GroupSpec] = None,
+    spec: GroupSpec | None = None,
     gs_fmt: EMFormat = GS_FMT_DEFAULT,
-    key: Optional[jax.Array] = None,
+    key: jax.Array | None = None,
 ) -> MLSTensor:
     """Full dynamic quantization, paper Alg. 2."""
     x = x.astype(jnp.float32)
@@ -293,9 +293,9 @@ def mls_quantize(
 def fake_quant(
     x: jax.Array,
     fmt: EMFormat,
-    spec: Optional[GroupSpec] = None,
+    spec: GroupSpec | None = None,
     gs_fmt: EMFormat = GS_FMT_DEFAULT,
-    key: Optional[jax.Array] = None,
+    key: jax.Array | None = None,
 ) -> jax.Array:
     """Quantize-dequantize: returns an fp32 tensor exactly on the MLS grid."""
     return mls_quantize(x, fmt, spec, gs_fmt, key).dequant()

@@ -16,7 +16,6 @@ key live in the checkpoint, so restarts resume the exact data stream
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +58,7 @@ def _class_pattern(num_classes: int, hw: int) -> jax.Array:
 
 
 def cifar_like_batch(key, batch: int, hw: int = 32, num_classes: int = 10,
-                     noise: float = 0.6) -> Dict[str, jax.Array]:
+                     noise: float = 0.6) -> dict[str, jax.Array]:
     kl, kn = jax.random.split(key)
     labels = jax.random.randint(kl, (batch,), 0, num_classes)
     pats = _class_pattern(num_classes, hw)
@@ -81,7 +80,7 @@ def make_cifar_iterator(batch: int, hw: int = 32, num_classes: int = 10,
 # ---------------------------------------------------------------------------
 # LM token streams
 # ---------------------------------------------------------------------------
-def lm_batch(key, batch: int, seq: int, vocab: int) -> Dict[str, jax.Array]:
+def lm_batch(key, batch: int, seq: int, vocab: int) -> dict[str, jax.Array]:
     """Order-1 Markov stream over a banded transition structure: token t+1 is
     (t * 31 + r) % vocab with r drawn from a small set — learnable by any LM."""
     k1, k2 = jax.random.split(key)
@@ -98,7 +97,7 @@ def lm_batch(key, batch: int, seq: int, vocab: int) -> Dict[str, jax.Array]:
 
 
 def make_lm_iterator(batch: int, seq: int, vocab: int, seed: int = 0,
-                     extras: Tuple[Tuple[str, tuple], ...] = ()):
+                     extras: tuple[tuple[str, tuple], ...] = ()):
     """``extras``: ((name, shape), ...) additional float inputs (frontend
     embeddings for the vlm/audio stubs)."""
 

@@ -14,7 +14,6 @@ Frameworks:
 """
 from __future__ import annotations
 
-from typing import Dict
 
 from repro.models.cnn import CNNConfig, count_ops
 
@@ -45,7 +44,7 @@ def conv_energy_ratio(k: int = 3) -> float:
     return full / ours
 
 
-def _op_totals(cfg: CNNConfig) -> Dict[str, float]:
+def _op_totals(cfg: CNNConfig) -> dict[str, float]:
     ops = count_ops(cfg, batch=1)
     conv_macs = sum(d["c_in"] * d["c_out"] * d["k"] ** 2 * d["h"] * d["w"] * d["n"]
                     for kd, d in ops if kd == "conv")
@@ -68,7 +67,7 @@ def _op_totals(cfg: CNNConfig) -> Dict[str, float]:
     }
 
 
-def network_energy(cfg: CNNConfig, framework: str = "mls") -> Dict[str, float]:
+def network_energy(cfg: CNNConfig, framework: str = "mls") -> dict[str, float]:
     """Per-image training-step energy (uJ), paper Table VI methodology.
 
     Training = 3 conv passes (fwd + error-bwd + weight-grad, Table I);
@@ -81,7 +80,7 @@ def network_energy(cfg: CNNConfig, framework: str = "mls") -> Dict[str, float]:
     e = MAC_ENERGY_PJ[framework]
     train_macs = 3 * t["conv_macs_fwd"]
     train_tree = 3 * t["conv_tree_fwd"]
-    rows: Dict[str, float] = {}
+    rows: dict[str, float] = {}
     if framework == "fp32":
         rows["conv_mul"] = train_macs * FLOAT_MUL
         rows["conv_add"] = train_macs * FLOAT_ADD
@@ -112,7 +111,7 @@ def network_energy(cfg: CNNConfig, framework: str = "mls") -> Dict[str, float]:
     return rows
 
 
-def efficiency_ratios(cfg: CNNConfig) -> Dict[str, float]:
+def efficiency_ratios(cfg: CNNConfig) -> dict[str, float]:
     ours = network_energy(cfg, "mls")["total_uj"]
     return {
         "vs_fp32": network_energy(cfg, "fp32")["total_uj"] / ours,

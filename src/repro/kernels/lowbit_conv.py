@@ -31,7 +31,8 @@ grouping is always the k-block "nc" analogue regardless of
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, NamedTuple, Optional, Tuple
+from collections.abc import Callable
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -123,8 +124,8 @@ def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
 def qd_gemm(
     x2d: jax.Array,
     w2d: jax.Array,
-    key_x: Optional[jax.Array],
-    key_w: Optional[jax.Array],
+    key_x: jax.Array | None,
+    key_w: jax.Array | None,
     *,
     fmt: EMFormat,
     gs_fmt: EMFormat = GS_FMT_DEFAULT,
@@ -163,7 +164,7 @@ def qd_gemm(
 # ---------------------------------------------------------------------------
 # im2col layout
 # ---------------------------------------------------------------------------
-def _im2col(x: jax.Array, ksize: Tuple[int, int], stride, padding):
+def _im2col(x: jax.Array, ksize: tuple[int, int], stride, padding):
     """NCHW -> (N*OH*OW, C*kh*kw) patch matrix (+ output spatial dims).
 
     Feature order is (c, kh, kw), matching ``w.reshape(O, C*kh*kw)`` of an

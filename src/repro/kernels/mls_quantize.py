@@ -16,7 +16,6 @@ in VMEM.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -101,7 +100,7 @@ def mls_quantize_pallas(
     fmt: EMFormat,
     k_block: int = 128,
     gs_fmt: EMFormat = GS_FMT_DEFAULT,
-    key: Optional[jax.Array] = None,
+    key: jax.Array | None = None,
     block_m: int = DEFAULT_BLOCK_M,
     interpret: bool = True,
 ):

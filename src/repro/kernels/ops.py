@@ -8,7 +8,6 @@ interpret mode (bit-exact semantics); on TPU they compile to Mosaic.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +32,7 @@ def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
 def lowbit_matmul_fused(
     x: jax.Array,
     w: jax.Array,
-    key: Optional[jax.Array] = None,
+    key: jax.Array | None = None,
     *,
     fmt: EMFormat,
     gs_fmt: EMFormat = GS_FMT_DEFAULT,

@@ -7,7 +7,6 @@ float `repro.core` implementation in the test suite.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,7 @@ def quantize_ref(
     k_block: int,
     gs_fmt: EMFormat = GS_FMT_DEFAULT,
     r_u8: jax.Array | None = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Reference dynamic quantization of a 2-D operand ``(M, K)``.
 
     Groups are ``(row, k-block)``.  ``r_u8`` is the uint8 stochastic-rounding

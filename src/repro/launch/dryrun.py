@@ -24,7 +24,7 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -59,14 +59,14 @@ def run_cell(
     arch: str,
     shape_name: str,
     multi_pod: bool,
-    rules: Optional[AxisRules] = None,
-    microbatch: Optional[int] = None,
+    rules: AxisRules | None = None,
+    microbatch: int | None = None,
     tag: str = "",
-    out_dir: Optional[str] = None,
+    out_dir: str | None = None,
     verbose: bool = True,
-    cfg_updates: Optional[Dict[str, Any]] = None,
+    cfg_updates: dict[str, Any] | None = None,
     seq_shard: bool = False,
-) -> Dict[str, Any]:
+) -> dict[str, Any]:
     """Lower + compile one cell; returns (and persists) the analysis record.
 
     ``cfg_updates``: ModelConfig field overrides (perf-iteration levers).
@@ -83,7 +83,7 @@ def run_cell(
     if cfg_updates:
         cfg = dataclasses.replace(cfg, **cfg_updates)
     shape = SHAPES[shape_name]
-    record: Dict[str, Any] = {
+    record: dict[str, Any] = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "n_devices": mesh.devices.size, "tag": tag,

@@ -20,7 +20,7 @@ Hardware constants (task brief, TPU v5e-class):
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import numpy as np
 
@@ -31,7 +31,7 @@ HBM_BW = 819e9
 ICI_BW = 50e9
 
 
-def _mesh_sizes(mesh) -> Dict[str, int]:
+def _mesh_sizes(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
@@ -117,7 +117,7 @@ def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig, mesh) -> float:
 
 
 def roofline_terms(cfg: ModelConfig, shape: ShapeConfig, mesh,
-                   record: Dict[str, Any]) -> Dict[str, Any]:
+                   record: dict[str, Any]) -> dict[str, Any]:
     sizes = _mesh_sizes(mesh)
     n_dev = int(np.prod(list(sizes.values())))
     hlo_flops_dev = record["hlo"]["dot_flops"]

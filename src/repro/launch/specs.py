@@ -12,7 +12,7 @@ Conventions (DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,7 @@ def sds(shape, dtype):
     return jax.ShapeDtypeStruct(tuple(shape), dtype)
 
 
-def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
     b, s = shape.global_batch, shape.seq_len
     if shape.kind == "decode":
         return {"tokens": sds((b, 1), jnp.int32)}

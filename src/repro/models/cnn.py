@@ -8,7 +8,7 @@ the reduced smoke/training configs used on CPU.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -99,7 +99,7 @@ def init_resnet(key, cfg: CNNConfig):
     return p
 
 
-def apply_resnet(p, x, cfg: CNNConfig, qcfg: Optional[QuantConfig], key=None):
+def apply_resnet(p, x, cfg: CNNConfig, qcfg: QuantConfig | None, key=None):
     depths, widths, imagenet_stem = _RESNET_STAGES[cfg.arch]
     # first layer unquantized (paper Sec. VI-A)
     h = nn.conv2d(p["stem"], x, 2 if imagenet_stem else 1, "SAME", None)
@@ -141,7 +141,7 @@ def init_vgg16(key, cfg: CNNConfig):
     return p
 
 
-def apply_vgg16(p, x, cfg: CNNConfig, qcfg: Optional[QuantConfig], key=None):
+def apply_vgg16(p, x, cfg: CNNConfig, qcfg: QuantConfig | None, key=None):
     h, ci, tag = x, 0, 0
     for v in _VGG16:
         if v == "M":
@@ -227,7 +227,7 @@ def init_googlenet(key, cfg: CNNConfig):
     return p
 
 
-def apply_googlenet(p, x, cfg: CNNConfig, qcfg: Optional[QuantConfig], key=None):
+def apply_googlenet(p, x, cfg: CNNConfig, qcfg: QuantConfig | None, key=None):
     imagenet = cfg.in_hw >= 128
     h = _cbr(p["stem1"], x, 7, 2 if imagenet else 1, None, None, 0)  # unquantized
     if imagenet:
@@ -261,7 +261,7 @@ def init_cnn(key, cfg: CNNConfig):
     raise ValueError(cfg.arch)
 
 
-def apply_cnn(p, x, cfg: CNNConfig, qcfg: Optional[QuantConfig] = None, key=None):
+def apply_cnn(p, x, cfg: CNNConfig, qcfg: QuantConfig | None = None, key=None):
     if cfg.arch.startswith("resnet"):
         return apply_resnet(p, x, cfg, qcfg, key)
     if cfg.arch == "vgg16":

@@ -17,7 +17,7 @@ Every quantization site derives its stochastic-rounding stream from
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -112,7 +112,7 @@ def _stack_init(key, cfg: ModelConfig, n: int, kind: str):
 def init_lm(key, cfg: ModelConfig):
     ks = iter(jax.random.split(key, 8))
     d = cfg.d_model
-    p: Dict[str, Any] = {
+    p: dict[str, Any] = {
         "emb": nn.trunc_normal(next(ks), (cfg.vocab, d), std=0.02),
         "final_norm": norm_init(cfg),
     }
@@ -139,7 +139,7 @@ def init_lm(key, cfg: ModelConfig):
 # ===========================================================================
 # embedding / head
 # ===========================================================================
-def embed(p, batch: Dict[str, Array], cfg: ModelConfig) -> Array:
+def embed(p, batch: dict[str, Array], cfg: ModelConfig) -> Array:
     tokens = batch["tokens"]
     x = jnp.take(p["emb"], tokens, axis=0).astype(cfg.compute_dtype)
     if cfg.frontend != "none" and "frontend_emb" in batch:
@@ -344,7 +344,7 @@ def _xdec_scan(p, x, cfg, qcfg, key, memory=None, *, caches=None,
 # ===========================================================================
 # train loss
 # ===========================================================================
-def lm_loss(p, batch: Dict[str, Array], cfg: ModelConfig, key=None):
+def lm_loss(p, batch: dict[str, Array], cfg: ModelConfig, key=None):
     """Causal (or seq2seq) LM loss. Returns (loss, metrics)."""
     qcfg = cfg.qcfg()
     p = gather_view(p, cfg)
@@ -437,7 +437,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 4096):
 
 
 def decode_step(p, cache, tokens: Array, cfg: ModelConfig,
-                memory: Optional[Array] = None):
+                memory: Array | None = None):
     """One serving step: ``tokens (B, 1)`` -> (logits (B, vocab), cache).
 
     No stochastic rounding at inference: nearest rounding (key=None).
@@ -487,7 +487,7 @@ def decode_step(p, cache, tokens: Array, cfg: ModelConfig,
     return logits, new_cache
 
 
-def prefill(p, batch: Dict[str, Array], cfg: ModelConfig, max_len: int):
+def prefill(p, batch: dict[str, Array], cfg: ModelConfig, max_len: int):
     """Run the full prompt, filling the cache; returns (logits_last, cache)."""
     qcfg = cfg.qcfg()
     if qcfg is not None:

@@ -11,7 +11,6 @@ Decode is O(1) per token: a single recurrent state update per layer.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,8 +65,8 @@ def ssd_chunked(
     bm: Array,  # (B, S, G, N)
     cm: Array,  # (B, S, G, N)
     chunk: int,
-    init_state: Optional[Array] = None,  # (B, H, P, N)
-) -> Tuple[Array, Array]:
+    init_state: Array | None = None,  # (B, H, P, N)
+) -> tuple[Array, Array]:
     """Returns (y (B,S,H,P), final_state (B,H,P,N)). fp32 internal math."""
     b, s, h, p = x.shape
     g, n = bm.shape[2], bm.shape[3]
@@ -121,7 +120,7 @@ def ssd_chunked(
     return y, final_state
 
 
-def _causal_conv(x: Array, w: Array, b: Array, state: Optional[Array] = None):
+def _causal_conv(x: Array, w: Array, b: Array, state: Array | None = None):
     """Depthwise causal conv over the sequence. x: (B, S, C); w: (C, K).
 
     With ``state`` (B, K-1, C) given (decode), prepends it; returns
@@ -150,9 +149,9 @@ def apply_mamba2(
     p,
     x: Array,  # (B, S, d)
     cfg: ModelConfig,
-    qcfg: Optional[QuantConfig],
+    qcfg: QuantConfig | None,
     key,
-    state: Optional[Tuple[Array, Array]] = None,  # (conv_state, ssm_state)
+    state: tuple[Array, Array] | None = None,  # (conv_state, ssm_state)
 ):
     """Full-sequence (train/prefill) or stateful (decode) Mamba2 block.
 

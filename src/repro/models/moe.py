@@ -12,7 +12,6 @@ the FLOPs — the best case for the paper's technique).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +63,7 @@ def _positions_in_runs(sorted_e: Array) -> Array:
     return idx - start_idx
 
 
-def apply_moe(p, x: Array, cfg: ModelConfig, qcfg: Optional[QuantConfig], key):
+def apply_moe(p, x: Array, cfg: ModelConfig, qcfg: QuantConfig | None, key):
     """x: (B, S, d) -> (y, aux_loss).
 
     With ``cfg.moe_dispatch_chunks > 1`` the sequence is split into that many
@@ -79,7 +78,7 @@ def apply_moe(p, x: Array, cfg: ModelConfig, qcfg: Optional[QuantConfig], key):
     return _apply_moe_rows(p, x, cfg, qcfg, key)
 
 
-def _apply_moe_rows(p, x: Array, cfg: ModelConfig, qcfg: Optional[QuantConfig],
+def _apply_moe_rows(p, x: Array, cfg: ModelConfig, qcfg: QuantConfig | None,
                     key):
     b, s, d = x.shape
     e, k, f = cfg.n_experts, cfg.top_k, cfg.moe_d_ff

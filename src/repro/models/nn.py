@@ -13,7 +13,6 @@ stable integer tag so every quantization site gets an independent stream
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +24,7 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 # op tracing (for the paper's Table I / Table VI op-count analyses)
 # ---------------------------------------------------------------------------
-_OP_TRACE: Optional[list] = None
+_OP_TRACE: list | None = None
 
 
 class OpTrace:
@@ -87,7 +86,7 @@ def init_linear(key, d_in, d_out, bias=False, dtype=jnp.float32, std=None):
     return p
 
 
-def linear(p, x, qcfg: Optional[QuantConfig] = None, key=None, wire=None):
+def linear(p, x, qcfg: QuantConfig | None = None, key=None, wire=None):
     """x: (..., d_in) @ w (d_in, d_out); bias (if any) added in fp32.
 
     ``wire``: which weight dim is FSDP-sharded (pins the FSDP gather onto
@@ -129,7 +128,7 @@ def init_conv(key, c_in, c_out, ksize, dtype=jnp.float32):
     return {"w": kaiming(key, (c_out, c_in, ksize, ksize), fan_in, dtype)}
 
 
-def conv2d(p, x, stride=1, padding="SAME", qcfg: Optional[QuantConfig] = None, key=None):
+def conv2d(p, x, stride=1, padding="SAME", qcfg: QuantConfig | None = None, key=None):
     """NCHW conv; quantized per paper Alg. 1 when qcfg is given."""
     s = (stride, stride) if isinstance(stride, int) else stride
     co, ci, kh, kw = p["w"].shape
@@ -196,7 +195,7 @@ def rmsnorm(p, x, eps=1e-6):
 # rotary embeddings
 # ---------------------------------------------------------------------------
 def rope_angles(positions: Array, head_dim: int, theta: float = 10000.0,
-                rotary_dim: Optional[int] = None):
+                rotary_dim: int | None = None):
     """Returns (sin, cos) of shape (..., rotary_dim/2)."""
     rd = rotary_dim or head_dim
     inv = 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
@@ -204,7 +203,7 @@ def rope_angles(positions: Array, head_dim: int, theta: float = 10000.0,
     return jnp.sin(ang), jnp.cos(ang)
 
 
-def apply_rope(x: Array, sin: Array, cos: Array, rotary_dim: Optional[int] = None):
+def apply_rope(x: Array, sin: Array, cos: Array, rotary_dim: int | None = None):
     """x: (B, S, H, D). Rotates the first ``rotary_dim`` dims (half-rotary
     style used by GLM when rotary_dim < D)."""
     d = x.shape[-1]
@@ -248,9 +247,9 @@ def gqa_attention(
     v: Array,  # (B, Sk, Hkv, D)
     causal: bool = True,
     q_offset: Array | int = 0,  # position of q[0] within the kv sequence
-    window: Optional[int] = None,  # sliding-window size (None = full)
+    window: int | None = None,  # sliding-window size (None = full)
     kv_len: Array | None = None,  # number of valid cache slots
-    q_chunk: Optional[int] = None,  # memory-efficient query chunking
+    q_chunk: int | None = None,  # memory-efficient query chunking
 ):
     """Grouped-query attention.  With ``q_chunk`` the query axis is scanned
     in blocks (exact softmax per block over the full key range) so the score

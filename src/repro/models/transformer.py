@@ -4,7 +4,6 @@ routed through the paper's MLS low-bit training path.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,17 +47,17 @@ def apply_attention(
     p,
     x: Array,  # (B, S, d)
     cfg: ModelConfig,
-    qcfg: Optional[QuantConfig],
+    qcfg: QuantConfig | None,
     key,
     *,
     causal: bool = True,
     positions: Array | None = None,  # (B, S) absolute positions of x
-    cache: Optional[Tuple[Array, Array]] = None,  # (B, M, KV, hd) x2
+    cache: tuple[Array, Array] | None = None,  # (B, M, KV, hd) x2
     cache_pos: Array | int = 0,  # write offset into the cache
     kv_valid: Array | int | None = None,  # #valid cache slots (ring buffers)
-    window: Optional[int] = None,
+    window: int | None = None,
     kv: Array | None = None,  # cross-attention source (B, Sk, d)
-    cross_cache: Optional[Tuple[Array, Array]] = None,  # read-only K/V
+    cross_cache: tuple[Array, Array] | None = None,  # read-only K/V
 ):
     b, s, d = x.shape
     hd = cfg.hd
@@ -120,7 +119,7 @@ def apply_attention(
 # ---------------------------------------------------------------------------
 # MLP
 # ---------------------------------------------------------------------------
-def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
     ks = jax.random.split(key, 3)
     d, f = cfg.d_model, d_ff or cfg.d_ff
     p = {

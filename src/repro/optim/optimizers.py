@@ -11,7 +11,8 @@ are fp32 regardless of the low-bit conv/GEMM format.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from collections.abc import Callable
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -111,7 +112,7 @@ def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac=0.1):
     return lr
 
 
-def make_optimizer(name: str, **kw) -> Tuple[Callable, Callable]:
+def make_optimizer(name: str, **kw) -> tuple[Callable, Callable]:
     if name == "sgdm":
         return sgdm_init, lambda g, s, p, lr: sgdm_update(g, s, p, lr, **kw)
     if name == "adamw":

@@ -16,7 +16,6 @@ generic ring for p pods.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,7 @@ def _flatten_pad(g: jax.Array, block: int):
 
 
 def compress(g: jax.Array, fmt: EMFormat = FMT_IMAGENET, block: int = 128,
-             key: Optional[jax.Array] = None):
+             key: jax.Array | None = None):
     """-> (codes uint8 (n, block), s_g f32 (n, 1), s_t f32 scalar)."""
     rows = _flatten_pad(g, block)
     t = mls_quantize(rows, fmt, GroupSpec((1, block)), GS_FMT_DEFAULT, key)
@@ -50,7 +49,7 @@ def decompress(codes, s_g, s_t, shape, fmt: EMFormat = FMT_IMAGENET):
 
 def crosspod_allreduce_mean(g: jax.Array, axis_name: str = "pod",
                             fmt: EMFormat = FMT_IMAGENET,
-                            key: Optional[jax.Array] = None) -> jax.Array:
+                            key: jax.Array | None = None) -> jax.Array:
     """Mean over the pod axis exchanging MLS-compressed codes.
 
     Must run inside ``shard_map`` with ``axis_name`` bound.  Exact wire

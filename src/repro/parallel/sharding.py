@@ -24,7 +24,6 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Dict, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -36,7 +35,7 @@ _state = threading.local()
 class AxisRules:
     """Mapping logical axis name -> physical mesh axis (or None)."""
 
-    rules: Tuple[Tuple[str, Optional[object]], ...]
+    rules: tuple[tuple[str, object | None], ...]
 
     def get(self, name: str):
         for k, v in self.rules:
@@ -107,16 +106,16 @@ def wire_pin(x: jax.Array, fsdp_dim: int) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, sp2)
 
 
-def current_rules() -> Optional[AxisRules]:
+def current_rules() -> AxisRules | None:
     return getattr(_state, "rules", None)
 
 
-def _current_mesh() -> Optional[Mesh]:
+def _current_mesh() -> Mesh | None:
     return getattr(_state, "mesh", None)
 
 
 @contextlib.contextmanager
-def axis_rules(rules: AxisRules, mesh: Optional[Mesh] = None):
+def axis_rules(rules: AxisRules, mesh: Mesh | None = None):
     """Bind logical->physical rules (and optionally a mesh) for model code."""
     prev = (current_rules(), _current_mesh())
     _state.rules, _state.mesh = rules, mesh
@@ -137,9 +136,9 @@ def _prune(mesh: Mesh, spec_entry):
     return pruned if pruned else None
 
 
-def logical_to_mesh(logical: Tuple[Optional[str], ...],
-                    rules: Optional[AxisRules] = None,
-                    mesh: Optional[Mesh] = None) -> P:
+def logical_to_mesh(logical: tuple[str | None, ...],
+                    rules: AxisRules | None = None,
+                    mesh: Mesh | None = None) -> P:
     rules = rules or current_rules() or DEFAULT_RULES
     mesh = mesh or _current_mesh()
     entries = []
@@ -162,7 +161,7 @@ def _axis_size(mesh: Mesh, entry) -> int:
     return n
 
 
-def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
     """Annotate ``x`` with a sharding constraint from logical axis names.
 
     No-op when no rules are bound (unit tests, single-device smoke runs).

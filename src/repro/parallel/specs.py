@@ -13,7 +13,7 @@ cross-pod traffic is the gradient all-reduce (optionally MLS-compressed).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 import numpy as np
@@ -23,7 +23,7 @@ from .sharding import AxisRules, DEFAULT_RULES, logical_to_mesh
 
 # (path-substring, logical axes per trailing dim) — first match wins.
 # Axes are aligned to the *trailing* dims; stacked layer dims get "stage".
-_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+_RULES: tuple[tuple[str, tuple[str | None, ...]], ...] = (
     ("emb", ("vocab", "fsdp")),
     ("lm_head", ("vocab", "fsdp")),
     ("frontend_proj", (None, "fsdp")),
@@ -60,7 +60,7 @@ def _mesh_axis_size(mesh: Mesh, entry) -> int:
                         for n in names if n in mesh.axis_names] or [1]))
 
 
-def logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+def logical_axes_for(path: str, ndim: int) -> tuple[str | None, ...]:
     for sub, axes in _RULES:
         if sub in path:
             n = len(axes)

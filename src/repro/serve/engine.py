@@ -7,7 +7,6 @@ jit-compiled with donated caches so decode steps run in-place.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +32,10 @@ class ServeEngine:
 
     def generate(
         self,
-        batch: Dict[str, jax.Array],  # {"tokens": (B, S_prompt), ...}
+        batch: dict[str, jax.Array],  # {"tokens": (B, S_prompt), ...}
         max_new_tokens: int,
         temperature: float = 0.0,
-        key: Optional[jax.Array] = None,
+        key: jax.Array | None = None,
     ) -> jax.Array:
         """Returns generated token ids (B, max_new_tokens)."""
         logits, cache = self._prefill(self.params, batch)

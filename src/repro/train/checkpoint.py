@@ -26,11 +26,12 @@ Properties required for 1000+-node operation (DESIGN.md §5):
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np
@@ -71,7 +72,7 @@ class CheckpointManager:
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
 
     # ---------------- save ----------------
     def save(self, step: int, tree: Any, blocking: bool = True):
@@ -120,14 +121,14 @@ class CheckpointManager:
             self._thread = None
 
     # ---------------- restore ----------------
-    def latest_step(self) -> Optional[int]:
+    def latest_step(self) -> int | None:
         steps = []
         for f in os.listdir(self.dir):
             if f.endswith(".done"):
                 steps.append(int(f[len("step_"):-len(".done")]))
         return max(steps) if steps else None
 
-    def restore(self, template: Any, step: Optional[int] = None,
+    def restore(self, template: Any, step: int | None = None,
                 shardings: Any = None) -> Any:
         """Restore into the structure of ``template``.  ``shardings``: an
         optional matching pytree of ``NamedSharding`` — arrays are placed
@@ -160,7 +161,5 @@ class CheckpointManager:
         for s in done[: max(0, len(done) - self.keep)]:
             name = os.path.join(self.dir, f"step_{s:08d}")
             shutil.rmtree(name, ignore_errors=True)
-            try:
+            with contextlib.suppress(OSError):
                 os.remove(name + ".done")
-            except OSError:
-                pass

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
 
 
 @dataclasses.dataclass
@@ -19,10 +18,10 @@ class StragglerMonitor:
     ema_decay: float = 0.9
     threshold: float = 2.0  # flag if step_time > threshold * ema
     warmup_steps: int = 3  # ignore compile-dominated first steps
-    ema: Optional[float] = None
+    ema: float | None = None
     steps: int = 0
-    flagged: List[int] = dataclasses.field(default_factory=list)
-    _t0: Optional[float] = None
+    flagged: list[int] = dataclasses.field(default_factory=list)
+    _t0: float | None = None
 
     def start(self):
         self._t0 = time.perf_counter()

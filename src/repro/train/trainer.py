@@ -9,7 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +21,7 @@ from repro.optim import clip_by_global_norm, cosine_schedule, make_optimizer
 from repro.parallel import shard
 
 
-def make_train_step(run: RunConfig, lr_fn: Optional[Callable] = None):
+def make_train_step(run: RunConfig, lr_fn: Callable | None = None):
     cfg = run.model
     opt_init, opt_update = make_optimizer(
         run.optimizer, weight_decay=run.weight_decay
@@ -62,7 +63,7 @@ def make_train_step(run: RunConfig, lr_fn: Optional[Callable] = None):
             )
             grads = jax.tree.map(lambda g: g / n, grads)
             loss = loss / n
-            metrics: Dict[str, Any] = {}
+            metrics: dict[str, Any] = {}
         else:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True

@@ -1,0 +1,123 @@
+"""Numerics legality lint + property-based checks of the ⟨E,M⟩ product /
+accumulation bit math (hypothesis, falling back to the local shim)."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.analysis.lint import (
+    check_format_pair,
+    lint_quant_config,
+    lint_shipped_presets,
+)
+from repro.core import FMT_CIFAR, FMT_IMAGENET, QuantConfig
+from repro.core.formats import EMFormat, accumulation_bits
+
+
+# ---------------------------------------------------------------------------
+# lint on shipped / explicit configs
+# ---------------------------------------------------------------------------
+def test_shipped_presets_all_legal():
+    results = lint_shipped_presets()
+    assert len(results) == 10
+    bad = {a: r.errors for a, r in results.items() if not r.ok}
+    assert not bad, bad
+
+
+def test_paper_formats_legal_at_paper_depth():
+    for fmt in (FMT_CIFAR, FMT_IMAGENET):
+        assert check_format_pair(fmt, 128) == []
+    assert lint_quant_config(
+        QuantConfig(fmt=FMT_CIFAR, backend="pallas", pallas_interpret=True)
+    ).ok
+
+
+def test_accumulator_invariant_rejected_at_construction():
+    # <2,4>: 14 product bits + log2(1024) = 24 >= 24 -> not exact in fp32
+    with pytest.raises(ValueError, match="no longer exact"):
+        QuantConfig(fmt=FMT_IMAGENET, k_block=1024)
+    # boundary: 512-deep groups still have 23 bits -> legal
+    QuantConfig(fmt=FMT_IMAGENET, k_block=512)
+    assert check_format_pair(FMT_IMAGENET, 1024) != []
+
+
+def test_invalid_grouping_rejected():
+    with pytest.raises(ValueError, match="grouping"):
+        QuantConfig(grouping="rowwise")
+
+
+def test_pallas_kblock_tiling_rules():
+    res = lint_quant_config(
+        QuantConfig(fmt=FMT_IMAGENET, backend="pallas", k_block=48)
+    )
+    assert not res.ok and "power-of-two" in res.errors[0]
+    res = lint_quant_config(
+        QuantConfig(fmt=FMT_IMAGENET, backend="pallas", k_block=32)
+    )
+    assert res.ok
+    assert any("128-wide TPU lane" in w for w in res.warnings)
+
+
+def test_group_scale_format_rules():
+    res = lint_quant_config(QuantConfig(gs_fmt=EMFormat(8, 3)))
+    assert not res.ok and "Mg=3" in res.errors[0]
+    res = lint_quant_config(QuantConfig(gs_fmt=EMFormat(2, 1)))
+    assert res.ok and any("underflow" in w for w in res.warnings)
+
+
+def test_oversized_element_format_rejected():
+    # <3,5> needs 9 storage bits -> cannot pack into uint8 codes
+    errs = check_format_pair(EMFormat(3, 5), 16)
+    assert any("uint8" in e for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# property-based: product/accumulation bit bounds vs brute force
+# ---------------------------------------------------------------------------
+def _max_fraction(fmt: EMFormat) -> int:
+    """Largest |integer fraction| any code decodes to (mirrors the Pallas
+    kernel's decode: base << shift)."""
+    best = 0
+    top = 2**fmt.e - 1
+    for exp in range(2**fmt.e):
+        for man in range(2**fmt.m):
+            base = man if exp == 0 else 2**fmt.m + man
+            shift = 0 if exp == 0 else top - exp
+            best = max(best, base << shift)
+    return best
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 3), st.integers(1, 7),
+       st.sampled_from([1, 2, 8, 32, 128, 512, 2048]))
+def test_product_bits_bounds_brute_force(e, m, k_block):
+    fmt = EMFormat(e, m)
+    fmax = _max_fraction(fmt)
+    # product_bits is a tight power-of-two envelope of the worst product
+    assert fmax * fmax < 2**fmt.product_bits
+    assert fmax * fmax >= 2 ** (fmt.product_bits - 2)
+    # whenever the invariant says "exact", a worst-case group sum really
+    # stays below 2^24 and fp32 accumulation is bit-exact
+    if accumulation_bits(fmt, k_block) < 24:
+        worst_sum = k_block * fmax * fmax
+        assert worst_sum < 2**24
+        acc = np.float32(0.0)
+        p = np.float32(fmax * fmax)
+        for _ in range(k_block):
+            acc += p
+        assert int(acc) == worst_sum
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 3), st.integers(0, 6))
+def test_max_value_matches_grid(e, m):
+    if e == 0 and m == 0:
+        return
+    fmt = EMFormat(e, m)
+    grid = fmt.grid()
+    assert grid[-1] == pytest.approx(fmt.max_value)
+    assert np.all(grid <= fmt.max_value)
+    assert fmt.element_bits == 1 + e + m
