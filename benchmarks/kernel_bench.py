@@ -12,14 +12,9 @@ import platform
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import FMT_IMAGENET, QuantConfig, lowbit_conv, lowbit_matmul
-from repro.kernels import (
-    lowbit_conv_fused,
-    lowbit_matmul_fused,
-    mls_quantize_pallas,
-)
+from repro.kernels import KERNEL_REGISTRY, lowbit_conv_fused
 
 
 def _time(f, *args, n=3):
@@ -31,32 +26,43 @@ def _time(f, *args, n=3):
 
 
 def run(quick: bool = True):
-    m = 256
-    x = jax.random.normal(jax.random.key(0), (m, 512))
-    w = jax.random.normal(jax.random.key(1), (512, 256)) * 0.05
+    # Pallas entry points come from KERNEL_REGISTRY — the same set the
+    # static verifier (analysis/kernel_verify.py) proves, so the perf trail
+    # and the legality gate can never drift apart.
     rows = []
-    us = _time(lambda a: mls_quantize_pallas(a, FMT_IMAGENET), x)
-    rows.append(("kernel/mls_quantize_pallas_256x512", us, "interpret-mode"))
-    us = _time(lambda a, b: lowbit_matmul_fused(a, b, None, fmt=FMT_IMAGENET), x, w)
-    rows.append(("kernel/lowbit_matmul_fused_256x512x256", us, "interpret-mode"))
+    for entry in KERNEL_REGISTRY.values():
+        if not entry.bench:
+            continue
+        fn, _ = entry.fn_and_args()
+        args = entry.concrete_args()
+        us = _time(jax.jit(fn), *args)
+        rows.append((f"kernel/{entry.name}_{entry.bench_tag}", us,
+                     "interpret-mode"))
+
+    # hand-coded XLA reference rows (not Pallas kernels, so not registered)
+    x = jax.random.normal(jax.random.key(0), (256, 512))
+    w = jax.random.normal(jax.random.key(1), (512, 256)) * 0.05
     cfg = QuantConfig(fmt=FMT_IMAGENET, stochastic=False)
     us = _time(jax.jit(lambda a, b: lowbit_matmul(a, b, None, cfg)), x, w)
     rows.append(("kernel/lowbit_matmul_fakequant_jit", us, "XLA-fused reference"))
     us = _time(jax.jit(lambda a, b: a @ b), x, w)
     rows.append(("kernel/fp32_matmul_jit", us, "baseline"))
 
-    # conv backends: quantized-domain Pallas im2col-GEMM vs fake-quant XLA
+    # conv backends: fake-quant XLA reference (+ a bigger Pallas shape with
+    # --full; the quick Pallas conv row is the registry's example shape)
     n, c, o, hw = (2, 16, 16, 8) if quick else (8, 32, 32, 16)
     xc = jax.random.normal(jax.random.key(2), (n, c, hw, hw))
     wc = jax.random.normal(jax.random.key(3), (o, c, 3, 3)) * 0.1
     tag = f"{n}x{c}x{hw}x{hw}_o{o}k3"
-    cfg_p = QuantConfig(fmt=FMT_IMAGENET, stochastic=False, backend="pallas",
-                        k_block=32)
-    us = _time(
-        jax.jit(lambda a, b: lowbit_conv_fused(a, b, None, (1, 1), "SAME", cfg_p)),
-        xc, wc,
-    )
-    rows.append((f"kernel/lowbit_conv_fused_{tag}", us, "interpret-mode"))
+    if not quick:
+        cfg_p = QuantConfig(fmt=FMT_IMAGENET, stochastic=False,
+                            backend="pallas", k_block=32)
+        us = _time(
+            jax.jit(lambda a, b: lowbit_conv_fused(a, b, None, (1, 1), "SAME",
+                                                   cfg_p)),
+            xc, wc,
+        )
+        rows.append((f"kernel/lowbit_conv_fused_{tag}", us, "interpret-mode"))
     us = _time(
         jax.jit(lambda a, b: lowbit_conv(a, b, None, (1, 1), "SAME", cfg)),
         xc, wc,

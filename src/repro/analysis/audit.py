@@ -11,8 +11,18 @@ process exits non-zero on any regression.
 
     PYTHONPATH=src python -m repro.analysis.audit --graph all --gate
 
-``--sabotage`` plants an fp32 GEMM on the train hot path — the negative
-control that must make the gate fail (exercised by the regression test).
+``--kernels`` adds the Pallas kernel static verifier
+(:mod:`repro.analysis.kernel_verify`): every ``KERNEL_REGISTRY`` entry is
+traced and proven for grid/index-map coverage and ``< 2^24`` integer
+accumulation, gated against ``analysis/baselines/kernels.json``:
+
+    PYTHONPATH=src python -m repro.analysis.audit --kernels --graph none --gate
+
+``--sabotage MODE`` plants a negative control that must make the gate
+fail (exercised by the regression tests): ``fp32_gemm`` (an fp32 GEMM on
+the train hot path), ``overlap_write`` (a kernel whose output index map
+writes one block from conflicting grid steps), or ``deep_k`` (a
+contraction tile whose integer accumulator exceeds 24 bits).
 """
 from __future__ import annotations
 
@@ -23,6 +33,8 @@ import pathlib
 import sys
 
 _BASELINE = pathlib.Path(__file__).parent / "baselines" / "gate.json"
+_KERNELS_BASELINE = (
+    pathlib.Path(__file__).parent / "baselines" / "kernels.json")
 
 
 def _force_host_devices(n: int) -> None:
@@ -39,8 +51,9 @@ def build_report(
     backend: str = "pallas",
     train_arch: str = "resnet20",
     serve_arch: str = "qwen2-72b",
-    sabotage: bool = False,
+    sabotage: str | None = None,
     wire: bool = True,
+    kernels: bool = False,
 ) -> dict:
     from repro.analysis.coverage import coverage_of_jaxpr
     from repro.analysis.lint import lint_quant_config, lint_shipped_presets
@@ -52,7 +65,7 @@ def build_report(
     built = []
     if "train" in graphs:
         g = cifar_train_graph(backend=backend, arch=train_arch,
-                              sabotage=sabotage)
+                              sabotage=sabotage == "fp32_gemm")
         built.append((g, QuantConfig(fmt=FMT_CIFAR, backend=backend,
                                      pallas_interpret=True)))
     if "serve" in graphs:
@@ -81,6 +94,13 @@ def build_report(
         from repro.analysis.wire import audit_wire_ring
 
         report["wire_ring"] = audit_wire_ring()
+
+    if kernels:
+        from repro.analysis.kernel_verify import run_kernel_audit
+
+        kernel_sabotage = sabotage if sabotage in (
+            "overlap_write", "deep_k") else None
+        report["kernels"] = run_kernel_audit(sabotage=kernel_sabotage)
 
     return report
 
@@ -114,6 +134,34 @@ def apply_gate(report: dict, baseline: dict) -> list[str]:
                 f"wire ring: compression ratio "
                 f"{wire['compression_ratio']:.2f} < {min_ratio}"
             )
+    failures += apply_kernel_gate(
+        report.get("kernels"), baseline.get("kernels", {}))
+    return failures
+
+
+def apply_kernel_gate(kernels: dict | None, baseline: dict) -> list[str]:
+    """Gate failures from the ``--kernels`` static-verifier section."""
+    if kernels is None:
+        return []
+    failures = []
+    reports = kernels.get("kernels", {})
+    for name in baseline.get("require_kernels", []):
+        if name not in reports:
+            failures.append(f"kernel {name}: missing from verifier report")
+    max_bits = baseline.get("max_integer_accumulation_bits")
+    for name, rep in reports.items():
+        for call in rep.get("calls", []):
+            for v in call.get("violations", []):
+                failures.append(
+                    f"kernel {name} ({call['kernel']}): {v['kind']} "
+                    f"violation at {v['where']}: {v['detail']}"
+                )
+        bits = rep.get("max_integer_accumulation_bits", 0)
+        if max_bits is not None and bits > max_bits:
+            failures.append(
+                f"kernel {name}: integer accumulation spans {bits} bits > "
+                f"baseline {max_bits}"
+            )
     return failures
 
 
@@ -122,7 +170,7 @@ def main(argv=None) -> int:
         prog="python -m repro.analysis.audit", description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
-    ap.add_argument("--graph", choices=["train", "serve", "all"],
+    ap.add_argument("--graph", choices=["train", "serve", "all", "none"],
                     default="all")
     ap.add_argument("--backend", choices=["pallas", "fake_quant"],
                     default="pallas")
@@ -134,22 +182,33 @@ def main(argv=None) -> int:
                     help="check against the baseline; exit 1 on regression")
     ap.add_argument("--no-wire", action="store_true",
                     help="skip the collective wire-byte audit")
-    ap.add_argument("--sabotage", action="store_true",
-                    help="plant an fp32 GEMM on the hot path (negative "
-                         "control; the gate must fail)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="run the Pallas kernel static verifier (coverage "
+                         "proofs + interval overflow prover) over "
+                         "KERNEL_REGISTRY")
+    ap.add_argument("--kernels-baseline", default=str(_KERNELS_BASELINE))
+    ap.add_argument("--sabotage", nargs="?", const="fp32_gemm", default=None,
+                    choices=["fp32_gemm", "overlap_write", "deep_k"],
+                    help="plant a negative control the gate must fail: an "
+                         "fp32 GEMM on the train hot path, an overlapping "
+                         "output index map, or a >24-bit contraction tile")
     args = ap.parse_args(argv)
 
     _force_host_devices(2)
 
-    graphs = ("train", "serve") if args.graph == "all" else (args.graph,)
+    graphs = () if args.graph == "none" else (
+        ("train", "serve") if args.graph == "all" else (args.graph,))
     report = build_report(
         graphs=graphs, backend=args.backend, train_arch=args.train_arch,
         serve_arch=args.serve_arch, sabotage=args.sabotage,
-        wire=not args.no_wire,
+        wire=not args.no_wire, kernels=args.kernels,
     )
 
     with open(args.baseline) as f:
         baseline = json.load(f)
+    if args.kernels:
+        with open(args.kernels_baseline) as f:
+            baseline["kernels"] = json.load(f)
     failures = apply_gate(report, baseline)
     report["gate"] = {
         "pass": not failures, "failures": failures,
@@ -170,6 +229,14 @@ def main(argv=None) -> int:
         w = report["wire_ring"]
         print(f"wire ring: {w['compression_ratio']:.2f}x vs fp32 "
               f"({w['wire_bytes_per_device']:.0f} B/device)")
+    if "kernels" in report:
+        ks = report["kernels"]
+        for name, rep in ks["kernels"].items():
+            print(f"kernel {name}: "
+                  f"{'OK' if rep['ok'] else 'FAIL'} "
+                  f"({rep['num_pallas_calls']} pallas_call(s), max int "
+                  f"accumulation {rep['max_integer_accumulation_bits']} "
+                  f"bits / budget {ks['budget_bits']})")
     if failures:
         print("GATE FAILURES:", file=sys.stderr)
         for fmsg in failures:

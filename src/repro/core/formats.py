@@ -82,6 +82,26 @@ class EMFormat:
         ``2M + 2^(E+1) - 2`` bits."""
         return 2 * self.m + 2 ** (self.e + 1) - 2
 
+    @property
+    def max_fraction(self) -> int:
+        """Largest |integer fraction| of a decoded code.
+
+        The quantized-domain GEMM contracts codes as exact integers
+        ``F`` with ``|value| = |F| * 2^(e_min - M)`` (``kernels/ref.py``
+        ``decode_frac_int``); the largest magnitude is the top normal:
+        ``(2^(M+1) - 1) << (2^E - 2)``.  ``max_fraction^2`` spans exactly
+        ``product_bits`` bits — the closed form the static interval prover
+        (``analysis/intervals.py``) must reproduce from the kernel jaxpr.
+        """
+        if self.e == 0:
+            return 2**self.m - 1
+        return (2 ** (self.m + 1) - 1) << (2**self.e - 2)
+
+    def fraction_bound(self) -> tuple[int, int]:
+        """``(lo, hi)`` interval of decoded signed integer fractions — the
+        operand seed for interval-domain kernel verification."""
+        return -self.max_fraction, self.max_fraction
+
     def grid(self) -> np.ndarray:
         """All representable non-negative values, ascending (for tests)."""
         vals = {0.0}

@@ -7,6 +7,9 @@
   all three GEMMs (fwd / wgrad / dgrad) in the quantized domain (Alg. 1)
 * ``ops``          — jit'd public wrappers
 * ``ref``          — pure-jnp oracles used by the test suite
+* ``registry``     — ``KERNEL_REGISTRY``: the one table of shipped Pallas
+  entry points shared by the static verifier, the benchmarks, and the
+  future autotuner
 """
 from .mls_quantize import mls_quantize_pallas
 from .mls_matmul import mls_matmul_pallas
@@ -20,8 +23,11 @@ from .lowbit_conv import (
     matmul_qd_ref,
     qd_gemm,
 )
+from .registry import KERNEL_REGISTRY, KernelEntry
 
 __all__ = [
+    "KERNEL_REGISTRY",
+    "KernelEntry",
     "mls_quantize_pallas",
     "mls_matmul_pallas",
     "lowbit_matmul_fused",

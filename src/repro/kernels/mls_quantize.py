@@ -103,7 +103,7 @@ def mls_quantize_pallas(
     key: jax.Array | None = None,
     block_m: int = DEFAULT_BLOCK_M,
     interpret: bool = True,
-):
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Quantize a 2-D ``(M, K)`` operand to packed MLS codes.
 
     Returns ``(codes uint8 (M, K), s_g f32 (M, K/k_block), s_t f32 scalar)``.

@@ -1,0 +1,251 @@
+"""Static kernel verifier: coverage proofs, interval overflow prover,
+sabotage negative controls and agreement with the closed-form lint.
+
+Property tests use hypothesis when installed, else the local shim.
+"""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import audit
+from repro.analysis.intervals import Interval, abstract_eval_jaxpr, integer_bits
+from repro.analysis.kernel_verify import (
+    _sabotage_deep_k_jaxpr,
+    _sabotage_overlap_jaxpr,
+    prove_matmul_accumulation_bits,
+    run_kernel_audit,
+    verify_candidate,
+    verify_closed_jaxpr,
+    verify_entry,
+)
+from repro.analysis.lint import check_format_pair
+from repro.core import FMT_IMAGENET
+from repro.core.formats import EMFormat, accumulation_bits
+from repro.kernels import KERNEL_REGISTRY
+from repro.kernels.ref import decode_frac_int
+
+
+# ---------------------------------------------------------------------------
+# registry + shipped kernels all verify clean
+# ---------------------------------------------------------------------------
+EXPECTED_KERNELS = {
+    "mls_quantize_pallas",
+    "mls_matmul_pallas",
+    "lowbit_matmul_fused",
+    "lowbit_conv_fused",
+    "lowbit_matmul_qd",
+}
+
+
+def test_registry_covers_shipped_kernels():
+    assert set(KERNEL_REGISTRY) == EXPECTED_KERNELS
+    for name, entry in KERNEL_REGISTRY.items():
+        assert entry.name == name
+        fn, avals = entry.fn_and_args()
+        assert callable(fn) and avals
+
+
+def test_shipped_kernels_verify_clean():
+    report = run_kernel_audit()
+    assert report["budget_bits"] == 24
+    assert set(report["kernels"]) == EXPECTED_KERNELS
+    bad = {n: r["calls"] for n, r in report["kernels"].items() if not r["ok"]}
+    assert report["ok"] and not bad, bad
+    for rep in report["kernels"].values():
+        assert rep["num_pallas_calls"] >= 1
+        assert rep["max_integer_accumulation_bits"] < 24
+
+
+def test_quantize_entry_report_shape():
+    rep = verify_entry(KERNEL_REGISTRY["mls_quantize_pallas"])
+    assert rep.ok and len(rep.calls) == 1
+    call = rep.calls[0].to_json()
+    # grid coverage was proven exhaustively, not assumed
+    assert call["exhaustive"]
+    cov = call["coverage"]["outputs[0]"]
+    assert cov["blocks_written"] == cov["output_blocks"]
+
+
+# ---------------------------------------------------------------------------
+# sabotage negative controls
+# ---------------------------------------------------------------------------
+def test_sabotage_overlap_names_overlap_and_gap():
+    rep = verify_closed_jaxpr(_sabotage_overlap_jaxpr(), "sabotage")
+    kinds = {v.kind for v in rep.violations}
+    assert not rep.ok
+    assert {"overlap", "gap"} <= kinds, kinds
+
+
+def test_sabotage_deep_k_names_overflow():
+    rep = verify_closed_jaxpr(_sabotage_deep_k_jaxpr(), "sabotage")
+    assert not rep.ok
+    kinds = {v.kind for v in rep.violations}
+    assert "overflow" in kinds, kinds
+    # <2,4> at k_block=2048: 14 product bits + 11 depth bits = 25
+    assert rep.max_integer_bits == accumulation_bits(FMT_IMAGENET, 2048) == 25
+
+
+@pytest.mark.parametrize("mode", ["overlap_write", "deep_k"])
+def test_audit_gate_trips_on_sabotage(mode, tmp_path):
+    out = tmp_path / f"report_{mode}.json"
+    rc = audit.main([
+        "--kernels", "--graph", "none", "--no-wire", "--gate",
+        "--sabotage", mode, "--out", str(out),
+    ])
+    assert rc != 0
+    report = json.loads(out.read_text())
+    sab = report["kernels"]["kernels"][f"sabotage:{mode}"]
+    assert not sab["ok"]
+
+
+def test_audit_gate_green_without_sabotage(tmp_path):
+    out = tmp_path / "report_clean.json"
+    rc = audit.main([
+        "--kernels", "--graph", "none", "--no-wire", "--gate",
+        "--out", str(out),
+    ])
+    assert rc == 0
+
+
+# ---------------------------------------------------------------------------
+# interval prover == closed-form lint on a (fmt, k_block) sweep
+# ---------------------------------------------------------------------------
+# m >= 1 keeps the closed form tight (m=0 formats are conservatively
+# over-counted by ~2 bits and rejected by the storage lint anyway);
+# the boundary pairs straddle the 24-bit budget from both sides.
+SWEEP_PAIRS = [
+    (EMFormat(0, 4), 16),
+    (EMFormat(1, 3), 128),
+    (EMFormat(2, 4), 128),   # FMT_IMAGENET at the paper depth
+    (EMFormat(2, 4), 512),   # 23 bits: legal boundary
+    (EMFormat(2, 5), 256),   # 24 bits: illegal boundary
+    (EMFormat(3, 1), 256),
+    (EMFormat(3, 2), 64),
+    (EMFormat(3, 3), 16),
+]
+
+
+@pytest.mark.parametrize(
+    "fmt,k_block", SWEEP_PAIRS, ids=[f"{f}_kb{k}" for f, k in SWEEP_PAIRS]
+)
+def test_prover_agrees_with_closed_form(fmt, k_block):
+    proved = prove_matmul_accumulation_bits(fmt, k_block)
+    assert proved == accumulation_bits(fmt, k_block)
+    # the prover flags exactly the pairs the lint's closed form flags
+    lint_flags = any("no longer" in e for e in check_format_pair(fmt, k_block))
+    assert (proved >= 24) == lint_flags
+
+
+# ---------------------------------------------------------------------------
+# autotuner legality oracle
+# ---------------------------------------------------------------------------
+def test_verify_candidate_legal_tiling():
+    rep = verify_candidate((64, 256, 64), (FMT_IMAGENET, 128), blocks=(64, 64))
+    assert rep.ok
+    assert rep.max_integer_bits == accumulation_bits(FMT_IMAGENET, 128)
+
+
+def test_verify_candidate_rejects_deep_accumulation():
+    rep = verify_candidate((64, 4096, 64), (EMFormat(2, 5), 2048),
+                           blocks=(64, 64))
+    assert not rep.ok
+    assert "overflow" in {v.kind for v in rep.violations}
+
+
+def test_verify_candidate_accepts_quant_config():
+    from repro.core import QuantConfig
+
+    cfg = QuantConfig(fmt=FMT_IMAGENET, backend="pallas", k_block=32,
+                      pallas_interpret=True)
+    rep = verify_candidate((32, 64, 32), cfg, blocks=(32, 32))
+    assert rep.ok
+
+
+# ---------------------------------------------------------------------------
+# interval-analysis soundness: concrete runs stay inside the abstract bounds
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 3), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_decode_interval_contains_concrete_values(e, m, seed):
+    """The static decode bound (read off the reduce_sum accumulation
+    event's operand bound) contains every concrete decode of random uint8
+    codes — and is exactly the ±max_fraction hull, not a loose cover."""
+    fmt = EMFormat(e, m)
+    codes = np.random.default_rng(seed).integers(0, 256, (4, 8), np.uint8)
+
+    def fn(c):
+        return jnp.sum(decode_frac_int(c, fmt).astype(jnp.float32))
+
+    cj = jax.make_jaxpr(fn)(jax.ShapeDtypeStruct(codes.shape, jnp.uint8))
+    _, res = abstract_eval_jaxpr(cj.jaxpr, [Interval.of_dtype(np.uint8)])
+    accs = [a for a in res.accumulations if a.kind == "acc"]
+    assert accs, "reduce_sum accumulation event not recorded"
+    static_bound = max(a.operand_bound for a in accs)
+    concrete = np.asarray(decode_frac_int(jnp.asarray(codes), fmt))
+    assert float(np.abs(concrete).max()) <= static_bound
+    lo, hi = fmt.fraction_bound()
+    assert concrete.min() >= lo and concrete.max() <= hi
+    assert static_bound == float(fmt.max_fraction)  # exact, not just sound
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4),
+       st.sampled_from([8, 16, 32]), st.integers(0, 2**31 - 1))
+def test_dot_interval_bound_is_sound(e, m, depth, seed):
+    """A depth-k integer dot of decoded fractions never exceeds the
+    interval prover's accumulation bound for that (fmt, depth)."""
+    fmt = EMFormat(e, m)
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, (4, depth), np.uint8)
+    b = rng.integers(0, 256, (depth, 4), np.uint8)
+
+    def fn(ca, cb):
+        fa = decode_frac_int(ca, fmt).astype(jnp.float32)
+        fb = decode_frac_int(cb, fmt).astype(jnp.float32)
+        return fa @ fb
+
+    cj = jax.make_jaxpr(fn)(
+        jax.ShapeDtypeStruct(a.shape, jnp.uint8),
+        jax.ShapeDtypeStruct(b.shape, jnp.uint8),
+    )
+    _, res = abstract_eval_jaxpr(
+        cj.jaxpr, [Interval.of_dtype(np.uint8)] * 2)
+    dots = [acc for acc in res.accumulations if acc.kind == "dot"]
+    assert dots, "dot_general accumulation event not recorded"
+    bound = max(acc.bound for acc in dots)
+    concrete = np.asarray(fn(jnp.asarray(a), jnp.asarray(b)))
+    assert float(np.abs(concrete).max()) <= bound
+    # the recorded bound matches the closed form's worst case exactly
+    fmax = fmt.max_fraction
+    assert bound == depth * fmax * fmax
+    assert max(acc.bits for acc in dots) == accumulation_bits(fmt, depth)
+
+
+def test_interval_arithmetic_soundness_small():
+    """Brute-force check of a few Interval ops against enumeration."""
+    xs = [-3.0, -1.0, 0.0, 2.0, 5.0]
+    a = Interval(-3.0, 5.0, True)
+    b = Interval(-1.0, 2.0, True)
+    ys = [-1.0, 0.0, 2.0]
+    for op, f in [
+        (a + b, lambda x, y: x + y),
+        (a - b, lambda x, y: x - y),
+        (a * b, lambda x, y: x * y),
+        (a.min_(b), min),
+        (a.max_(b), max),
+    ]:
+        for x in xs:
+            for y in ys:
+                v = f(x, y)
+                assert op.lo <= v <= op.hi, (op, v)
+    assert a.abs().lo == 0.0 and a.abs().hi == 5.0
+    assert integer_bits(255.0) == 8 and integer_bits(256.0) == 9
