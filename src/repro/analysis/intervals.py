@@ -211,6 +211,14 @@ class Interval:
             return Interval(max(self.lo, o.lo), float(2**bits - 1), True)
         return Interval(-_INF, _INF, True)
 
+    def bit_xor(self, o: Interval) -> Interval:
+        if self.lo >= 0 and o.lo >= 0 and self.bounded and o.bounded:
+            # XOR can clear any bit (x ^ x = 0), so unlike OR the lower
+            # bound is 0, never max(lo_a, lo_b).
+            bits = max(integer_bits(self.hi), integer_bits(o.hi))
+            return Interval(0.0, float(2**bits - 1), True)
+        return Interval(-_INF, _INF, True)
+
     def shift_left(self, o: Interval) -> Interval:
         if o.lo >= 0 and o.bounded and self.bounded:
             f = 2.0 ** int(o.hi)
@@ -300,10 +308,13 @@ def _hull(vals: np.ndarray) -> Interval:
 
 # numpy realizations of elementwise primitives for the seed-image domain
 def _np_shift_left(a, b):
-    return np.where(
-        b < 63, (a.astype(np.int64) << b.astype(np.int64)).astype(np.float64),
-        np.inf,
-    )
+    # Scale in float64: multiplying by a power of two is exact until it
+    # overflows to inf, where the isfinite bail-out reverts to intervals.
+    # An int64 `<<` would instead wrap silently once integer_bits(a) + b
+    # reaches 64, corrupting the "exact" image with finite garbage.
+    with np.errstate(over="ignore", invalid="ignore"):
+        res = a.astype(np.float64) * np.exp2(b.astype(np.float64))
+        return np.where(a == 0, 0.0, res)
 
 
 def _np_shift_right(a, b):
@@ -343,14 +354,25 @@ _NP_BINARY = {
     "gt": lambda a, b: (a > b).astype(np.float64),
     "ge": lambda a, b: (a >= b).astype(np.float64),
 }
-# value-preserving layout ops: the image passes through untouched (the
-# output's values are a subset/rearrangement of the input's, so the image
-# remains a sound over-approximation of the element value set)
-_LAYOUT_PRIMS = frozenset({
-    "broadcast_in_dim", "reshape", "transpose", "squeeze", "expand_dims",
-    "slice", "dynamic_slice", "rev", "copy", "gather", "stop_gradient",
-    "reduce_precision", "reduce_max", "reduce_min",
+# Value- and order-preserving layout ops: flat element order is unchanged,
+# so the image passes through with its seed identity intact and stays
+# pointwise-aligned with other images of the same seed.
+_EXACT_LAYOUT_PRIMS = frozenset({
+    "reshape", "squeeze", "expand_dims", "copy", "stop_gradient",
+    "reduce_precision",
 })
+# Value-preserving but element-rearranging/selecting/duplicating ops: the
+# output's values are still a subset of the input's, so the image remains a
+# sound per-element over-approximation — but positional correspondence with
+# the seed is broken (x[0:4] and x[4:8] carry the same image yet pair
+# *different* seed elements), so the image survives only under a FRESH seed
+# identity; binary ops between two rearrangements of one source then fall
+# back to sound interval rules instead of pointwise alignment.
+_REARRANGE_PRIMS = frozenset({
+    "broadcast_in_dim", "transpose", "slice", "dynamic_slice", "rev",
+    "gather", "reduce_max", "reduce_min",
+})
+_LAYOUT_PRIMS = _EXACT_LAYOUT_PRIMS | _REARRANGE_PRIMS
 
 
 @dataclasses.dataclass
@@ -585,7 +607,10 @@ class _Interp:
                 x.integer and lo.integer and hi.integer)))
             return
         if prim in _LAYOUT_PRIMS:
-            out(ins[0])
+            v = ins[0]
+            if v.vals is not None and prim in _REARRANGE_PRIMS:
+                v = dataclasses.replace(v, src=next(_seed_counter))
+            out(v)
             return
         if prim in ("concatenate", "pad", "dynamic_update_slice"):
             joined = ins[0]
@@ -632,7 +657,7 @@ class _Interp:
             "exp2": lambda: iv[0].exp2(),
             "and": lambda: iv[0].bit_and(iv[1]),
             "or": lambda: iv[0].bit_or(iv[1]),
-            "xor": lambda: iv[0].bit_or(iv[1]),  # same envelope as OR
+            "xor": lambda: iv[0].bit_xor(iv[1]),
             "not": lambda: _BOOL,
             "shift_left": lambda: iv[0].shift_left(iv[1]),
             "shift_right_arithmetic": lambda: iv[0].shift_right(iv[1]),

@@ -67,6 +67,7 @@ __all__ = [
 ACC_BUDGET_BITS = 24      # fp32 integer-exactness budget (paper Sec. V-B)
 _MAX_GRID_POINTS = 1 << 18  # full index-map enumeration cap
 _MAX_STEP_REPLAYS = 2048    # abstract body replays over used grid axes
+_MAX_UNUSED_REPLAYS = 8     # unused-axis subgrid replays before fixpoint gate
 
 SABOTAGE_MODES = ("overlap_write", "deep_k")
 
@@ -315,28 +316,41 @@ def _prove_body(eqn, grid: tuple[int, ...]):
     finals, res = abstract_eval_jaxpr(body, seeds, steps=steps)
     accs = list(res.accumulations)
     warnings += res.warnings
+    violations: list[Violation] = []
 
     # The sequential grid replays the used-axes subgrid once per setting of
-    # the unused axes, with scratch state carried across replays.  Replay
-    # the abstraction a second time seeded with the first pass's end state:
-    # a well-formed kernel re-initializes its accumulators (fixpoint); one
-    # that doesn't shows up as growing bounds and is gated below.
+    # the unused axes, with scratch state carried across replays.  Re-run
+    # the abstraction seeded with the previous pass's end state until it
+    # reaches a fixpoint (a well-formed kernel re-initializes its
+    # accumulators every replay) or the concrete replay count is exhausted.
+    # State still widening once the cap cuts the iteration short means the
+    # recorded bounds under-cover the remaining concrete replays, so it
+    # gates as unproven rather than merely warning.
     unused_repeat = math.prod(
         g for a, g in enumerate(grid) if a not in used
     ) if grid else 1
     if steps is not None and unused_repeat > 1:
-        finals2, res2 = abstract_eval_jaxpr(body, finals, steps=steps)
-        accs += res2.accumulations
-        if any(
-            (f2.lo < f1.lo or f2.hi > f1.hi)
-            for f1, f2 in zip(finals, finals2)
-        ):
-            warnings.append(
-                "ref state keeps widening across grid replays "
-                "(accumulator not re-initialized per output tile?)"
+        replays = min(unused_repeat, _MAX_UNUSED_REPLAYS)
+        widening = False
+        for _ in range(replays - 1):
+            finals2, res2 = abstract_eval_jaxpr(body, finals, steps=steps)
+            accs += res2.accumulations
+            widening = any(
+                (f2.lo < f1.lo or f2.hi > f1.hi)
+                for f1, f2 in zip(finals, finals2)
             )
-        finals = finals2
-    return finals, accs, warnings, exhaustive
+            finals = finals2
+            if not widening:
+                break
+        if widening and unused_repeat > replays:
+            violations.append(Violation(
+                "unproven", "body",
+                f"ref state keeps widening after {replays} of "
+                f"{unused_repeat} grid replays (accumulator not "
+                f"re-initialized per output tile?): accumulation bounds "
+                f"for the remaining replays are not covered",
+            ))
+    return finals, accs, warnings, exhaustive, violations
 
 
 def verify_pallas_eqn(eqn, name: str) -> CallReport:
@@ -372,8 +386,10 @@ def verify_pallas_eqn(eqn, name: str) -> CallReport:
             if cov is not None:
                 coverage[where] = cov
 
-    finals, accs, body_warnings, body_exhaustive = _prove_body(eqn, grid)
+    finals, accs, body_warnings, body_exhaustive, body_viols = _prove_body(
+        eqn, grid)
     warnings += body_warnings
+    violations += body_viols
     exhaustive = exhaustive and body_exhaustive
     int_accs = [a for a in accs if a.integer]
     max_bits = max((a.bits for a in int_accs), default=0)

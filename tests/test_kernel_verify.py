@@ -230,6 +230,128 @@ def test_dot_interval_bound_is_sound(e, m, depth, seed):
     assert max(acc.bits for acc in dots) == accumulation_bits(fmt, depth)
 
 
+# ---------------------------------------------------------------------------
+# review regressions: seed-image alignment, xor, shift wrap, replay fixpoint
+# ---------------------------------------------------------------------------
+def test_rearranged_slices_not_pointwise_aligned():
+    """Two different slices of one seed must not be treated as pointwise
+    equal: sum(x[0:4] - x[4:8]) over uint8 is concretely up to 4*255, not
+    0 (the bound the aligned-image domain used to prove)."""
+    def fn(c):
+        x = c.astype(jnp.int32)
+        return jnp.sum(x[0:4] - x[4:8])
+
+    cj = jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((8,), jnp.uint8))
+    _, res = abstract_eval_jaxpr(cj.jaxpr, [Interval.of_dtype(np.uint8)])
+    accs = [a for a in res.accumulations if a.kind == "acc"]
+    assert accs, "reduce_sum accumulation event not recorded"
+    bound = max(a.bound for a in accs)
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 256, (8,), np.uint8)
+    concrete = abs(int(np.asarray(fn(jnp.asarray(x)))))
+    assert concrete <= bound
+    assert bound >= 4 * 255  # the sound worst case, not the aligned 0
+
+
+def test_transposed_image_not_pointwise_aligned():
+    """x @ x.T pairs rearranged elements of one seed; the dot bound must
+    cover the concrete worst case 255*255*K, not collapse via alignment."""
+    def fn(c):
+        x = c.astype(jnp.int32).astype(jnp.float32)
+        return x @ x.T
+
+    cj = jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((4, 4), jnp.uint8))
+    _, res = abstract_eval_jaxpr(cj.jaxpr, [Interval.of_dtype(np.uint8)])
+    dots = [a for a in res.accumulations if a.kind == "dot"]
+    assert dots and max(a.bound for a in dots) >= 4 * 255 * 255
+
+
+def test_xor_interval_lower_bound_is_zero():
+    """x ^ y can be smaller than both operands (5 ^ 5 = 0); the xor rule
+    must not inherit OR's max(lo_a, lo_b) lower bound."""
+    a = Interval(5.0, 7.0, True)
+    r = a.bit_xor(a)
+    assert r.lo == 0.0 and r.hi >= 7.0
+
+    def fn(x, y):
+        return jnp.sum(jnp.bitwise_xor(x, y).astype(jnp.int32))
+
+    cj = jax.make_jaxpr(fn)(
+        jax.ShapeDtypeStruct((4,), jnp.uint8),
+        jax.ShapeDtypeStruct((4,), jnp.uint8),
+    )
+    _, res = abstract_eval_jaxpr(
+        cj.jaxpr, [Interval(5.0, 7.0, True), Interval(5.0, 7.0, True)])
+    accs = [a for a in res.accumulations if a.kind == "acc"]
+    assert accs
+    # sum of 4 xors each in [0, 7]: lo must reach 0 (all pairs equal)
+    assert all(acc.bound <= 4 * 7 for acc in accs)
+
+
+def test_bit_op_intervals_sound_bruteforce():
+    ranges = [(0, 7), (3, 12), (5, 7), (1, 1)]
+    for alo, ahi in ranges:
+        for blo, bhi in ranges:
+            ia = Interval(float(alo), float(ahi), True)
+            ib = Interval(float(blo), float(bhi), True)
+            for op, f in [
+                (ia.bit_and(ib), lambda x, y: x & y),
+                (ia.bit_or(ib), lambda x, y: x | y),
+                (ia.bit_xor(ib), lambda x, y: x ^ y),
+            ]:
+                for x in range(alo, ahi + 1):
+                    for y in range(blo, bhi + 1):
+                        assert op.lo <= f(x, y) <= op.hi, (x, y, op)
+
+
+def test_np_shift_left_never_wraps():
+    """Huge shifts must saturate to inf (image path bails to intervals),
+    never wrap int64 into finite garbage that poisons the 'exact' hull."""
+    from repro.analysis.intervals import _np_shift_left
+
+    exact = _np_shift_left(np.array([4096.0]), np.array([55.0]))
+    assert exact[0] == 4096.0 * 2.0**55  # would wrap in int64
+    huge = _np_shift_left(np.array([3.0]), np.array([2000.0]))
+    assert not np.isfinite(huge[0])
+    assert _np_shift_left(np.array([0.0]), np.array([2000.0]))[0] == 0.0
+
+
+def _replayed_acc_jaxpr(repeat):
+    """Kernel whose int32 output accumulates every step and is never
+    re-initialized, under an unused grid axis replaying the subgrid
+    ``repeat`` times — the pattern the replay fixpoint must gate."""
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        k = pl.program_id(1)  # keeps axis 1 a *used* axis in the body
+        o_ref[...] += x_ref[...].astype(jnp.int32) + k
+
+    def fn(x):
+        return pl.pallas_call(
+            kernel,
+            grid=(repeat, 4),
+            in_specs=[pl.BlockSpec((8, 8), lambda r, k: (0, 0))],
+            out_specs=pl.BlockSpec((8, 8), lambda r, k: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((8, 8), jnp.int32),
+            interpret=True,
+        )(x)
+
+    return jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((8, 8), jnp.uint8))
+
+
+def test_widening_replays_beyond_cap_gate_as_unproven():
+    rep = verify_closed_jaxpr(_replayed_acc_jaxpr(64), "widening")
+    assert not rep.ok
+    assert "unproven" in {v.kind for v in rep.violations}
+
+
+def test_widening_replays_within_cap_fully_covered():
+    # 4 <= replay cap: every concrete replay is abstractly executed, so the
+    # recorded bounds cover the whole grid and nothing is left unproven
+    rep = verify_closed_jaxpr(_replayed_acc_jaxpr(4), "covered")
+    assert "unproven" not in {v.kind for v in rep.violations}
+
+
 def test_interval_arithmetic_soundness_small():
     """Brute-force check of a few Interval ops against enumeration."""
     xs = [-3.0, -1.0, 0.0, 2.0, 5.0]
