@@ -1,6 +1,14 @@
 """Pallas kernel micro-benchmarks (interpret mode on CPU: correctness-grade
 timings, structural not wall-clock-representative of TPU).
 
+For every bench-flagged ``KERNEL_REGISTRY`` entry with a tuning spec, two
+rows are emitted: the *static default* tiling and the *tuned* tiling
+resolved from the persistent autotuner cache (``kernels/tuned/
+kernel_tune.json`` seed + local overlay) — served from the cache without
+re-timing the search.  Rows carry ``blocks``/``grouping``/``tuned`` fields
+in the JSON artifact so the perf trail records which tiling produced each
+number.
+
 Runs inside the ``benchmarks/run.py`` CSV driver, or standalone with a JSON
 artifact for the CI perf trail::
 
@@ -15,20 +23,70 @@ import jax
 
 from repro.core import FMT_IMAGENET, QuantConfig, lowbit_conv, lowbit_matmul
 from repro.kernels import KERNEL_REGISTRY, lowbit_conv_fused
+from repro.kernels.autotune import (
+    default_block_config,
+    get_cache,
+    time_config,
+)
 
 
-def _time(f, *args, n=3):
+def _time(f, *args, n=5):
+    """Best-of-n wall time in us (min is far more noise-robust than mean
+    for micro-benchmarks: noise is one-sided)."""
     f(*args)  # compile
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(n):
+        t0 = time.perf_counter()
         jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / n * 1e6
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _row(name, us, derived, config=None, tuned=None, cached=None):
+    r = {"name": name, "us_per_call": round(us, 1), "derived": derived}
+    if config is not None:
+        r["blocks"] = {
+            "block_m": config.block_m, "block_n": config.block_n,
+            "k_block": config.k_block,
+        }
+        r["grouping"] = config.grouping
+    if tuned is not None:
+        r["tuned"] = tuned
+    if cached is not None:
+        r["cached"] = cached
+    return r
+
+
+def _tuned_rows(entry, cache):
+    """(default, tuned) row pair for one registry entry's tuning spec.
+
+    The tuned tiling is *resolved* from the cache, never re-searched here;
+    when the cached winner equals the static default, the default's
+    measurement is reused (so tuned <= default holds by construction in
+    the degenerate case)."""
+    spec = entry.tune
+    base = f"kernel/{entry.name}_{entry.bench_tag}"
+    default_cfg = default_block_config(spec)
+    winner = cache.get(spec.key())
+    us_default = time_config(spec, default_cfg, n=5)
+    if winner is None or winner == default_cfg:
+        us_tuned, tuned_cfg = us_default, default_cfg
+    else:
+        us_tuned, tuned_cfg = time_config(spec, winner, n=5), winner
+    return [
+        _row(f"{base}_default", us_default, "interpret-mode",
+             config=default_cfg, tuned=False),
+        _row(f"{base}_tuned", us_tuned, "interpret-mode",
+             config=tuned_cfg, tuned=True, cached=winner is not None),
+    ]
 
 
 def run(quick: bool = True):
     # Pallas entry points come from KERNEL_REGISTRY — the same set the
-    # static verifier (analysis/kernel_verify.py) proves, so the perf trail
-    # and the legality gate can never drift apart.
+    # static verifier (analysis/kernel_verify.py) proves and the autotuner
+    # tunes, so the perf trail, the legality gate and the tuning cache can
+    # never drift apart.
+    cache = get_cache()
     rows = []
     for entry in KERNEL_REGISTRY.values():
         if not entry.bench:
@@ -36,17 +94,20 @@ def run(quick: bool = True):
         fn, _ = entry.fn_and_args()
         args = entry.concrete_args()
         us = _time(jax.jit(fn), *args)
-        rows.append((f"kernel/{entry.name}_{entry.bench_tag}", us,
-                     "interpret-mode"))
+        rows.append(_row(f"kernel/{entry.name}_{entry.bench_tag}", us,
+                         "interpret-mode"))
+        if entry.tune is not None:
+            rows += _tuned_rows(entry, cache)
 
     # hand-coded XLA reference rows (not Pallas kernels, so not registered)
     x = jax.random.normal(jax.random.key(0), (256, 512))
     w = jax.random.normal(jax.random.key(1), (512, 256)) * 0.05
     cfg = QuantConfig(fmt=FMT_IMAGENET, stochastic=False)
     us = _time(jax.jit(lambda a, b: lowbit_matmul(a, b, None, cfg)), x, w)
-    rows.append(("kernel/lowbit_matmul_fakequant_jit", us, "XLA-fused reference"))
+    rows.append(_row("kernel/lowbit_matmul_fakequant_jit", us,
+                     "XLA-fused reference"))
     us = _time(jax.jit(lambda a, b: a @ b), x, w)
-    rows.append(("kernel/fp32_matmul_jit", us, "baseline"))
+    rows.append(_row("kernel/fp32_matmul_jit", us, "baseline"))
 
     # conv backends: fake-quant XLA reference (+ a bigger Pallas shape with
     # --full; the quick Pallas conv row is the registry's example shape)
@@ -62,13 +123,14 @@ def run(quick: bool = True):
                                                    cfg_p)),
             xc, wc,
         )
-        rows.append((f"kernel/lowbit_conv_fused_{tag}", us, "interpret-mode"))
+        rows.append(_row(f"kernel/lowbit_conv_fused_{tag}", us,
+                         "interpret-mode"))
     us = _time(
         jax.jit(lambda a, b: lowbit_conv(a, b, None, (1, 1), "SAME", cfg)),
         xc, wc,
     )
-    rows.append((f"kernel/lowbit_conv_fakequant_jit_{tag}", us,
-                 "XLA-fused reference"))
+    rows.append(_row(f"kernel/lowbit_conv_fakequant_jit_{tag}", us,
+                     "XLA-fused reference"))
     return rows
 
 
@@ -80,8 +142,9 @@ def main() -> None:
                     help="write rows as a BENCH_*.json artifact")
     args = ap.parse_args()
     rows = run(quick=not args.full)
-    for name, us, derived in rows:
-        print(f'{name},{us:.1f},"{derived}"', flush=True)
+    for r in rows:
+        print(f'{r["name"]},{r["us_per_call"]:.1f},"{r["derived"]}"',
+              flush=True)
     if args.json:
         payload = {
             "suite": "kernel_bench",
@@ -89,10 +152,7 @@ def main() -> None:
             "backend": jax.default_backend(),
             "machine": platform.machine(),
             "quick": not args.full,
-            "rows": [
-                {"name": n, "us_per_call": round(us, 1), "derived": d}
-                for n, us, d in rows
-            ],
+            "rows": rows,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -41,8 +41,13 @@ def main() -> None:
         if args.only and args.only != name:
             continue
         try:
-            for row_name, us, derived in mod.run(quick=not args.full):
-                print(f'{row_name},{us:.1f},"{derived}"', flush=True)
+            for row in mod.run(quick=not args.full):
+                if isinstance(row, dict):  # rich rows (kernel_bench)
+                    print(f'{row["name"]},{row["us_per_call"]:.1f},'
+                          f'"{row["derived"]}"', flush=True)
+                else:
+                    row_name, us, derived = row
+                    print(f'{row_name},{us:.1f},"{derived}"', flush=True)
         except Exception:  # noqa: BLE001
             ok = False
             traceback.print_exc()

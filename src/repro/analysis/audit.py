@@ -14,7 +14,10 @@ process exits non-zero on any regression.
 ``--kernels`` adds the Pallas kernel static verifier
 (:mod:`repro.analysis.kernel_verify`): every ``KERNEL_REGISTRY`` entry is
 traced and proven for grid/index-map coverage and ``< 2^24`` integer
-accumulation, gated against ``analysis/baselines/kernels.json``:
+accumulation, gated against ``analysis/baselines/kernels.json``.  It also
+re-proves every winner in the committed autotuning seed cache
+(``kernels/tuned/kernel_tune.json``) and fails the gate when the cache is
+stale or missing a registry tuning spec:
 
     PYTHONPATH=src python -m repro.analysis.audit --kernels --graph none --gate
 
@@ -97,10 +100,16 @@ def build_report(
 
     if kernels:
         from repro.analysis.kernel_verify import run_kernel_audit
+        from repro.kernels.autotune import (
+            SEED_CACHE_PATH, TuneCache, check_cache)
 
         kernel_sabotage = sabotage if sabotage in (
             "overlap_write", "deep_k") else None
         report["kernels"] = run_kernel_audit(sabotage=kernel_sabotage)
+        # Tuning-cache staleness: the committed seed cache must cover every
+        # registry tuning spec and every seeded winner must still prove
+        # legal against the current kernels.
+        report["tune_cache"] = check_cache(TuneCache.load(SEED_CACHE_PATH))
 
     return report
 
@@ -136,6 +145,9 @@ def apply_gate(report: dict, baseline: dict) -> list[str]:
             )
     failures += apply_kernel_gate(
         report.get("kernels"), baseline.get("kernels", {}))
+    tc = report.get("tune_cache")
+    if tc is not None and not tc["ok"]:
+        failures += [f"tune cache: {f}" for f in tc["failures"]]
     return failures
 
 
@@ -237,6 +249,11 @@ def main(argv=None) -> int:
                   f"({rep['num_pallas_calls']} pallas_call(s), max int "
                   f"accumulation {rep['max_integer_accumulation_bits']} "
                   f"bits / budget {ks['budget_bits']})")
+    if "tune_cache" in report:
+        tc = report["tune_cache"]
+        print(f"tune cache: {'OK' if tc['ok'] else 'STALE'} "
+              f"({tc['verified']} winner(s) re-verified, "
+              f"{len(tc['required_specs'])} registry spec(s))")
     if failures:
         print("GATE FAILURES:", file=sys.stderr)
         for fmsg in failures:

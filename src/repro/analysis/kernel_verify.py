@@ -62,6 +62,7 @@ __all__ = [
     "verify_candidate",
     "verify_closed_jaxpr",
     "verify_entry",
+    "verify_quantize_candidate",
 ]
 
 ACC_BUDGET_BITS = 24      # fp32 integer-exactness budget (paper Sec. V-B)
@@ -457,26 +458,32 @@ def _unpack_qcfg(qcfg) -> tuple[EMFormat, int, EMFormat]:
 
 def verify_candidate(
     shape: tuple[int, int, int], qcfg, blocks: tuple[int, int] | None = None,
+    grouping: str | None = None,
 ) -> KernelReport:
     """Autotuner legality oracle: statically verify one tiling candidate.
 
     ``shape`` is the GEMM ``(M, K, N)``; ``qcfg`` a ``QuantConfig`` or a
     bare ``(fmt, k_block)`` pair (for sweeps over configs that
     ``QuantConfig`` itself would refuse to construct); ``blocks`` the
-    ``(block_m, block_n)`` output tiling.  The full fused pipeline
-    (quantize x, quantize w, quantized-domain GEMM) is traced at those
-    shapes and every ``pallas_call`` is proven — nothing is compiled, so
-    illegal tilings are pruned before costing a Mosaic compile.
+    ``(block_m, block_n)`` output tiling; ``grouping`` the group-scale
+    layout (``None`` takes the QuantConfig's grouping, or ``"nc"``).  The
+    full fused pipeline (quantize x, quantize w, quantized-domain GEMM) is
+    traced at those shapes and every ``pallas_call`` is proven — nothing is
+    compiled, so illegal tilings are pruned before costing a Mosaic
+    compile.
     """
     M, K, N = shape
     fmt, k_block, gs_fmt = _unpack_qcfg(qcfg)
+    if grouping is None:
+        grouping = qcfg.grouping if isinstance(qcfg, QuantConfig) else "nc"
     block_m, block_n = blocks or (128, 128)
     from repro.kernels.ops import lowbit_matmul_fused
 
     def fn(x, w):
         return lowbit_matmul_fused(
             x, w, None, fmt=fmt, gs_fmt=gs_fmt, k_block=k_block,
-            block_m=block_m, block_n=block_n, interpret=True,
+            block_m=block_m, block_n=block_n, grouping=grouping,
+            interpret=True,
         )
 
     cj = jax.make_jaxpr(fn)(
@@ -484,7 +491,32 @@ def verify_candidate(
         jax.ShapeDtypeStruct((K, N), jnp.float32),
     )
     return verify_closed_jaxpr(
-        cj, f"candidate_{M}x{K}x{N}_{fmt}_kb{k_block}_b{block_m}x{block_n}")
+        cj,
+        f"candidate_{M}x{K}x{N}_{fmt}_kb{k_block}_b{block_m}x{block_n}"
+        f"_{grouping}",
+    )
+
+
+def verify_quantize_candidate(
+    shape: tuple[int, int], fmt: EMFormat, k_block: int, block_m: int,
+    gs_fmt: EMFormat = GS_FMT_DEFAULT, grouping: str = "nc",
+) -> KernelReport:
+    """Legality oracle for a quantizer tiling candidate: trace
+    ``mls_quantize_pallas`` on an ``(M, K)`` operand at one ``block_m`` /
+    ``grouping`` and statically prove every ``pallas_call`` (grid coverage
+    + accumulator budget), without compiling."""
+    M, K = shape
+    from repro.kernels.mls_quantize import mls_quantize_pallas
+
+    def fn(x):
+        return mls_quantize_pallas(
+            x, fmt, k_block, gs_fmt, None, block_m=block_m,
+            interpret=True, grouping=grouping,
+        )
+
+    cj = jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((M, K), jnp.float32))
+    return verify_closed_jaxpr(
+        cj, f"qcandidate_{M}x{K}_{fmt}_kb{k_block}_bm{block_m}_{grouping}")
 
 
 def prove_matmul_accumulation_bits(fmt: EMFormat, k_block: int) -> int:

@@ -19,8 +19,8 @@ lint) nothing verified:
 * **Grouping / group-scale format** — grouping spec must name a known
   layout; the group-scale fraction must stay within the shift-add budget of
   the inter-group combine (``Mg <= 2``: at most 3 shifted adds per scale).
-  On ``backend="pallas"`` any grouping other than the contraction-tile
-  ``"nc"`` layout is warned about: the Pallas GEMM ignores the field today.
+  All four Table IV groupings are first-class kernel parameters on both
+  backends (the Pallas GEMM consumes each layout's compact group scales).
 
 Everything here is pure Python on dataclass fields — safe to run in CI
 without an accelerator.
@@ -121,15 +121,6 @@ def lint_quant_config(cfg: QuantConfig) -> LintResult:
             warnings.append(
                 f"k_block={kb} is not a multiple of the 128-wide TPU lane; "
                 f"Mosaic pads the contraction tile, wasting MXU occupancy"
-            )
-        if cfg.grouping != "nc":
-            warnings.append(
-                f"backend='pallas' silently ignores grouping="
-                f"{cfg.grouping!r}: the Pallas GEMM always scales with "
-                f"contraction-tile ('nc') k-block groups, so this config "
-                f"will not quantize the way it claims (grouping as a "
-                f"first-class kernel parameter is the ROADMAP autotuning "
-                f"refactor)"
             )
 
     if cfg.shard_ways < 1:

@@ -60,12 +60,19 @@ class QuantConfig:
     #   "fake_quant": quantize-dequantize + XLA conv/dot (GPU-style simulation)
     #   "pallas":     quantized-domain Pallas kernels over the im2col/implicit
     #                 GEMM lowering (kernels.lowbit_conv) — the paper's real
-    #                 low-bit arithmetic.  Grouping is always the k-block
-    #                 contraction-tile layout; `grouping` is ignored here.
+    #                 low-bit arithmetic.  `grouping` selects the kernel's
+    #                 group-scale layout (the matmul analogue of Table IV),
+    #                 with the contraction axis playing the input channel.
     backend: str = "fake_quant"
-    # Pallas execution mode: None = auto (Mosaic on TPU, interpreter on CPU);
-    # set explicitly to force either.
+    # Pallas execution mode: None = defer to the process-wide switch
+    # (explicit > REPRO_PALLAS_INTERPRET env > Mosaic on TPU / interpreter
+    # elsewhere); set explicitly to force either.
     pallas_interpret: bool | None = None
+    # Pallas GEMM output tiles.  None = resolve per call-site shape through
+    # the autotuner cache (kernels.autotune: explicit override > cache hit >
+    # proven-legal default); set to pin a tiling explicitly.
+    block_m: int | None = None
+    block_n: int | None = None
 
     def __post_init__(self):
         if self.backend not in ("fake_quant", "pallas"):

@@ -9,8 +9,13 @@
 * ``ref``          — pure-jnp oracles used by the test suite
 * ``registry``     — ``KERNEL_REGISTRY``: the one table of shipped Pallas
   entry points shared by the static verifier, the benchmarks, and the
-  future autotuner
+  autotuner
+* ``autotune``     — shape-keyed block-size autotuner with a persistent
+  tuning cache (``python -m repro.kernels.autotune``)
+* ``runtime``      — the process-wide interpret-mode switch
+  (``REPRO_PALLAS_INTERPRET``)
 """
+from .autotune import BlockConfig, TuneSpec, resolve_block_config
 from .mls_quantize import mls_quantize_pallas
 from .mls_matmul import mls_matmul_pallas
 from .ops import lowbit_matmul_fused
@@ -24,10 +29,17 @@ from .lowbit_conv import (
     qd_gemm,
 )
 from .registry import KERNEL_REGISTRY, KernelEntry
+from .runtime import INTERPRET_ENV_VAR, default_interpret, resolve_interpret
 
 __all__ = [
     "KERNEL_REGISTRY",
     "KernelEntry",
+    "BlockConfig",
+    "TuneSpec",
+    "resolve_block_config",
+    "INTERPRET_ENV_VAR",
+    "default_interpret",
+    "resolve_interpret",
     "mls_quantize_pallas",
     "mls_matmul_pallas",
     "lowbit_matmul_fused",

@@ -1,0 +1,603 @@
+"""Shape-keyed Pallas kernel autotuner with a persistent tuning cache.
+
+The paper's energy argument (Sec. VII) only materializes if the low-bit
+GEMMs run at hardware speed, and no single static tiling does that across
+shapes.  This module searches tiling candidates per *tuning key* —
+``(kind, shape, <E,M> format, grouping)`` — and persists the winners:
+
+* **Candidates** are :class:`BlockConfig` points — ``(block_m, block_n,
+  k_block, grouping)`` for a GEMM, ``block_m`` for the quantizer —
+  enumerated by :func:`gemm_candidates` / :func:`quantize_candidates`.
+* **Pruning**: every candidate is first proven legal by the static verifier
+  (:func:`repro.analysis.kernel_verify.verify_candidate`): grid coverage +
+  the 2^24 integer-accumulation budget, from traced jaxpr metadata alone.
+  Illegal tilings are never timed (and never cost a Mosaic compile).
+* **Timing**: survivors run through the real fused pipeline
+  (``lowbit_matmul_fused`` / ``mls_quantize_pallas``), best-of-n.
+* **Persistence**: winners land in a JSON cache — ``.cache/kernel_tune.json``
+  by default, overridable via the ``REPRO_TUNE_CACHE`` env var or an
+  explicit path — merged over the committed seed cache
+  (``kernels/tuned/kernel_tune.json``) that CI keeps fresh with
+  ``python -m repro.kernels.autotune --check``.
+
+Hot-path resolution (:func:`resolve_block_config`) never times or traces:
+**explicit override > cache hit > proven-legal default**, where the default
+is legal by construction (blocks are clamped and operands padded to block
+multiples by the kernels; the accumulator budget is enforced at
+``QuantConfig`` construction).
+
+CLI::
+
+    python -m repro.kernels.autotune --tune            # tune registry shapes
+    python -m repro.kernels.autotune --check           # CI: seed cache fresh?
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import pathlib
+import sys
+import time
+from collections.abc import Callable, Iterable
+
+from repro.core.formats import EMFormat, accumulation_bits
+
+__all__ = [
+    "BlockConfig",
+    "TuneSpec",
+    "TuneCache",
+    "CACHE_ENV_VAR",
+    "CACHE_SCHEMA_VERSION",
+    "DEFAULT_CACHE_PATH",
+    "SEED_CACHE_PATH",
+    "check_cache",
+    "default_block_config",
+    "gemm_candidates",
+    "get_cache",
+    "invalidate_cache",
+    "quantize_candidates",
+    "resolve_block_config",
+    "time_config",
+    "tune_all",
+    "tune_spec",
+]
+
+CACHE_SCHEMA_VERSION = 1
+CACHE_ENV_VAR = "REPRO_TUNE_CACHE"
+DEFAULT_CACHE_PATH = pathlib.Path(".cache") / "kernel_tune.json"
+SEED_CACHE_PATH = pathlib.Path(__file__).parent / "tuned" / "kernel_tune.json"
+
+_MAX_ACC_BITS = 24  # fp32 integer-exactness budget (paper Sec. V-B)
+
+
+# ---------------------------------------------------------------------------
+# BlockConfig / TuneSpec
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """One tiling point of the Pallas kernel layer.
+
+    ``block_m`` / ``block_n`` tile the GEMM output (``block_m`` doubles as
+    the quantizer's row block); ``k_block`` is the contraction tile ==
+    scaling-group width; ``grouping`` the group-scale layout the kernel
+    executes (``kernels.mls_matmul.sg_shapes``).
+    """
+
+    block_m: int
+    block_n: int
+    k_block: int
+    grouping: str = "nc"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> BlockConfig:
+        return cls(
+            block_m=int(d["block_m"]), block_n=int(d["block_n"]),
+            k_block=int(d["k_block"]), grouping=str(d["grouping"]),
+        )
+
+    def replace(self, **kw) -> BlockConfig:
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneSpec:
+    """One tunable workload: a GEMM or a quantizer call at a fixed shape.
+
+    ``kind`` is ``"gemm"`` (shape ``(M, K, N)``) or ``"quantize"``
+    (shape ``(M, K)``).  ``k_block`` is the *caller's* group width — the
+    search may try neighbours, but resolution pins it back when the caller
+    fixes numerics.
+    """
+
+    kind: str
+    shape: tuple[int, ...]
+    fmt: EMFormat
+    k_block: int = 128
+    grouping: str = "nc"
+
+    def __post_init__(self):
+        if self.kind not in ("gemm", "quantize"):
+            raise ValueError(f"unknown TuneSpec kind {self.kind!r}")
+        want = 3 if self.kind == "gemm" else 2
+        if len(self.shape) != want:
+            raise ValueError(
+                f"{self.kind} TuneSpec needs a rank-{want} shape, "
+                f"got {self.shape}")
+
+    def key(self) -> str:
+        """The cache key: (kind, shape, format, grouping)."""
+        dims = "x".join(str(int(d)) for d in self.shape)
+        return f"{self.kind}:{dims}:e{self.fmt.e}m{self.fmt.m}:{self.grouping}"
+
+    def to_json(self) -> dict:
+        return {
+            "kind": self.kind, "shape": list(self.shape),
+            "fmt": [self.fmt.e, self.fmt.m], "k_block": self.k_block,
+            "grouping": self.grouping,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> TuneSpec:
+        e, m = d["fmt"]
+        return cls(
+            kind=str(d["kind"]), shape=tuple(int(s) for s in d["shape"]),
+            fmt=EMFormat(int(e), int(m)), k_block=int(d.get("k_block", 128)),
+            grouping=str(d.get("grouping", "nc")),
+        )
+
+
+def tune_spec(
+    kind: str, shape: Iterable[int], fmt: EMFormat,
+    k_block: int = 128, grouping: str = "nc",
+) -> TuneSpec:
+    return TuneSpec(kind, tuple(int(s) for s in shape), fmt, k_block, grouping)
+
+
+def cache_key(
+    kind: str, shape: Iterable[int], fmt: EMFormat, grouping: str
+) -> str:
+    dims = "x".join(str(int(d)) for d in shape)
+    return f"{kind}:{dims}:e{fmt.e}m{fmt.m}:{grouping}"
+
+
+# ---------------------------------------------------------------------------
+# Persistent cache
+# ---------------------------------------------------------------------------
+class TuneCache:
+    """JSON-backed map ``key -> (BlockConfig winner, timing metadata)``.
+
+    Corrupted files and unknown schema versions degrade to an empty cache
+    (recorded in ``load_warnings``) — resolution then falls back to the
+    proven-legal defaults instead of crashing.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = pathlib.Path(path) if path is not None else None
+        self.entries: dict[str, dict] = {}
+        self.load_warnings: list[str] = []
+
+    # -- I/O ---------------------------------------------------------------
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> TuneCache:
+        cache = cls(path)
+        p = pathlib.Path(path)
+        if not p.exists():
+            return cache
+        try:
+            payload = json.loads(p.read_text())
+        except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+            cache.load_warnings.append(f"{p}: unreadable tuning cache ({e})")
+            return cache
+        if not isinstance(payload, dict) or (
+            payload.get("version") != CACHE_SCHEMA_VERSION
+        ):
+            cache.load_warnings.append(
+                f"{p}: tuning-cache schema "
+                f"{payload.get('version') if isinstance(payload, dict) else '?'}"
+                f" != {CACHE_SCHEMA_VERSION}; ignoring stale cache"
+            )
+            return cache
+        entries = payload.get("entries", {})
+        if not isinstance(entries, dict):
+            cache.load_warnings.append(f"{p}: malformed 'entries'; ignoring")
+            return cache
+        for key, ent in entries.items():
+            try:
+                BlockConfig.from_json(ent["config"])  # validate eagerly
+                cache.entries[str(key)] = ent
+            except (KeyError, TypeError, ValueError) as e:
+                cache.load_warnings.append(
+                    f"{p}: dropping malformed entry {key!r} ({e})")
+        return cache
+
+    def save(self, path: str | os.PathLike | None = None) -> pathlib.Path:
+        p = pathlib.Path(path) if path is not None else self.path
+        if p is None:
+            raise ValueError("TuneCache.save: no path")
+        p.parent.mkdir(parents=True, exist_ok=True)
+        payload = {
+            "version": CACHE_SCHEMA_VERSION,
+            "generated_unix": round(time.time(), 1),
+            "entries": {k: self.entries[k] for k in sorted(self.entries)},
+        }
+        p.write_text(json.dumps(payload, indent=2) + "\n")
+        return p
+
+    # -- access ------------------------------------------------------------
+    def get(self, key: str) -> BlockConfig | None:
+        ent = self.entries.get(key)
+        return BlockConfig.from_json(ent["config"]) if ent else None
+
+    def put(
+        self, spec: TuneSpec, config: BlockConfig, us: float,
+        timed: int = 0, source: str = "autotune",
+    ) -> None:
+        self.entries[spec.key()] = {
+            **spec.to_json(),
+            "config": config.to_json(),
+            "us": round(float(us), 2),
+            "candidates_timed": int(timed),
+            "source": source,
+        }
+
+    def merged_over(self, base: TuneCache) -> TuneCache:
+        """This cache's entries overlaid on ``base`` (self wins)."""
+        out = TuneCache(self.path)
+        out.entries = {**base.entries, **self.entries}
+        out.load_warnings = base.load_warnings + self.load_warnings
+        return out
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+_CACHE: TuneCache | None = None
+
+
+def get_cache() -> TuneCache:
+    """The process-wide resolution cache, loaded once: the local cache
+    (``REPRO_TUNE_CACHE`` env or ``.cache/kernel_tune.json``) merged over
+    the committed seed cache."""
+    global _CACHE
+    if _CACHE is None:
+        local = TuneCache.load(
+            os.environ.get(CACHE_ENV_VAR, DEFAULT_CACHE_PATH))
+        _CACHE = local.merged_over(TuneCache.load(SEED_CACHE_PATH))
+    return _CACHE
+
+
+def invalidate_cache() -> None:
+    """Drop the memoized resolution cache (tests / after re-tuning)."""
+    global _CACHE
+    _CACHE = None
+
+
+# ---------------------------------------------------------------------------
+# Defaults and candidate enumeration
+# ---------------------------------------------------------------------------
+def default_block_config(
+    spec: TuneSpec | None = None, *, shape: tuple[int, ...] | None = None,
+    fmt: EMFormat | None = None, k_block: int = 128, grouping: str = "nc",
+) -> BlockConfig:
+    """The static tiling the kernels shipped with: 128^2 output tiles at
+    the caller's ``k_block``.  Legal by construction — the kernels clamp
+    blocks to the array extent and pad ragged tails, and the accumulator
+    budget for ``(fmt, k_block)`` is enforced where the config is built."""
+    if spec is not None:
+        k_block, grouping = spec.k_block, spec.grouping
+    return BlockConfig(128, 128, k_block, grouping)
+
+
+def _legal_k_blocks(fmt: EMFormat, k_block: int) -> list[int]:
+    """The caller's group width plus power-of-two neighbours that keep the
+    integer accumulator inside the fp32-exactness budget."""
+    cands = {k_block, k_block // 2, k_block * 2, 64, 128}
+    return sorted(
+        kb for kb in cands
+        if kb >= 16 and kb <= 512 and (kb & (kb - 1)) == 0
+        and accumulation_bits(fmt, kb) < _MAX_ACC_BITS
+    )
+
+
+def gemm_candidates(spec: TuneSpec) -> list[BlockConfig]:
+    """Candidate tilings for a GEMM spec, static default included (so the
+    tuned winner can never lose to the shipped tiling)."""
+    M, _, N = spec.shape
+    bms = sorted({b for b in (32, 64, 128, 256) if b <= max(M, 128)})
+    bns = sorted({b for b in (32, 64, 128, 256) if b <= max(N, 128)})
+    out = [default_block_config(spec)]
+    for kb in _legal_k_blocks(spec.fmt, spec.k_block):
+        for bm in bms:
+            for bn in bns:
+                c = BlockConfig(bm, bn, kb, spec.grouping)
+                if c not in out:
+                    out.append(c)
+    return out
+
+
+def quantize_candidates(spec: TuneSpec) -> list[BlockConfig]:
+    """Candidate row blocks for the quantizer (block_n unused, kept at the
+    default for a well-formed BlockConfig)."""
+    M, _ = spec.shape
+    bms = sorted({b for b in (64, 128, 256, 512) if b <= max(M, 128)})
+    out = [BlockConfig(256, 128, spec.k_block, spec.grouping)]  # shipped
+    for bm in bms:
+        c = BlockConfig(bm, 128, spec.k_block, spec.grouping)
+        if c not in out:
+            out.append(c)
+    return out
+
+
+def candidates_for(spec: TuneSpec) -> list[BlockConfig]:
+    if spec.kind == "gemm":
+        return gemm_candidates(spec)
+    return quantize_candidates(spec)
+
+
+# ---------------------------------------------------------------------------
+# Legality oracle (static verifier) and timing
+# ---------------------------------------------------------------------------
+def verify_config(spec: TuneSpec, config: BlockConfig):
+    """Statically prove one candidate (grid coverage + accumulator budget)
+    without compiling or executing — the autotuner's pruning step.  Returns
+    the verifier's ``KernelReport``."""
+    from repro.analysis.kernel_verify import (
+        verify_candidate, verify_quantize_candidate)
+
+    if spec.kind == "gemm":
+        M, K, N = spec.shape
+        return verify_candidate(
+            (M, K, N), (spec.fmt, config.k_block),
+            (config.block_m, config.block_n), grouping=config.grouping,
+        )
+    M, K = spec.shape
+    return verify_quantize_candidate(
+        (M, K), spec.fmt, config.k_block, config.block_m,
+        grouping=config.grouping,
+    )
+
+
+def time_config(spec: TuneSpec, config: BlockConfig, n: int = 3) -> float:
+    """Best-of-n wall time (us) of the fused pipeline at one tiling."""
+    import jax
+    import jax.numpy as jnp
+
+    if spec.kind == "gemm":
+        from .ops import lowbit_matmul_fused
+
+        M, K, N = spec.shape
+        x = jax.random.normal(jax.random.key(0), (M, K), jnp.float32)
+        w = jax.random.normal(jax.random.key(1), (K, N), jnp.float32) * 0.1
+
+        def fn():
+            return lowbit_matmul_fused(
+                x, w, None, fmt=spec.fmt, k_block=config.k_block,
+                block_m=config.block_m, block_n=config.block_n,
+                grouping=config.grouping,
+            )
+    else:
+        from .mls_quantize import mls_quantize_pallas
+
+        M, K = spec.shape
+        x = jax.random.normal(jax.random.key(0), (M, K), jnp.float32)
+
+        # the operand must be a real jit argument, not a closure constant —
+        # XLA would constant-fold the whole quantization otherwise
+        f = jax.jit(lambda a: mls_quantize_pallas(
+            a, spec.fmt, config.k_block, block_m=config.block_m,
+            grouping=config.grouping,
+        ))
+
+        def fn():
+            return f(x)
+
+    jax.block_until_ready(fn())  # compile
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Tuning
+# ---------------------------------------------------------------------------
+def tune(
+    spec: TuneSpec,
+    cache: TuneCache,
+    timer: Callable[[TuneSpec, BlockConfig], float] | None = None,
+    force: bool = False,
+    log: Callable[[str], None] | None = None,
+) -> BlockConfig:
+    """Tune one spec: cache hit short-circuits (no timing), otherwise
+    enumerate -> prune with the static verifier -> time survivors -> persist
+    the winner.  ``timer`` is injectable for tests."""
+    key = spec.key()
+    if not force:
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+    timer = timer or time_config
+    say = log or (lambda _m: None)
+    timed = 0
+    best: tuple[float, BlockConfig] | None = None
+    for config in candidates_for(spec):
+        report = verify_config(spec, config)
+        if not report.ok:
+            say(f"  pruned {config} ({report.violations[0].kind})")
+            continue
+        us = timer(spec, config)
+        timed += 1
+        say(f"  {config}: {us:.1f} us")
+        if best is None or us < best[0]:
+            best = (us, config)
+    if best is None:  # cannot happen: the static default always proves
+        raise RuntimeError(f"no legal candidate for {key}")
+    cache.put(spec, best[1], best[0], timed=timed)
+    return best[1]
+
+
+def registry_specs() -> list[TuneSpec]:
+    """The tuning specs declared by ``KERNEL_REGISTRY`` entries."""
+    from repro.kernels.registry import KERNEL_REGISTRY
+
+    return [e.tune for e in KERNEL_REGISTRY.values() if e.tune is not None]
+
+
+def tune_all(
+    cache: TuneCache,
+    specs: Iterable[TuneSpec] | None = None,
+    timer: Callable[[TuneSpec, BlockConfig], float] | None = None,
+    force: bool = False,
+    log: Callable[[str], None] | None = None,
+) -> dict[str, BlockConfig]:
+    say = log or (lambda _m: None)
+    out = {}
+    for spec in specs if specs is not None else registry_specs():
+        say(f"tuning {spec.key()}")
+        out[spec.key()] = tune(spec, cache, timer=timer, force=force, log=log)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Staleness check (CI --check mode; also the audit's cache gate)
+# ---------------------------------------------------------------------------
+def check_cache(
+    cache: TuneCache, specs: Iterable[TuneSpec] | None = None,
+) -> dict:
+    """Prove the cache is fresh: every registry spec has an entry, and
+    every cached winner still passes the static verifier.  Returns a
+    report dict with ``ok`` and per-problem ``failures``."""
+    failures: list[str] = []
+    specs = list(specs) if specs is not None else registry_specs()
+    for spec in specs:
+        if cache.get(spec.key()) is None:
+            failures.append(
+                f"registry shape {spec.key()} has no tuning-cache entry "
+                f"(run: python -m repro.kernels.autotune --tune)"
+            )
+    checked = 0
+    for key, ent in sorted(cache.entries.items()):
+        try:
+            spec = TuneSpec.from_json(ent)
+            config = BlockConfig.from_json(ent["config"])
+        except (KeyError, TypeError, ValueError) as e:
+            failures.append(f"cache entry {key}: malformed ({e})")
+            continue
+        report = verify_config(spec, config)
+        checked += 1
+        if not report.ok:
+            v = report.violations[0]
+            failures.append(
+                f"cache entry {key}: winner {config} no longer verifies "
+                f"({v.kind} at {v.where}: {v.detail})"
+            )
+    return {
+        "ok": not failures,
+        "entries": len(cache),
+        "verified": checked,
+        "required_specs": [s.key() for s in specs],
+        "load_warnings": cache.load_warnings,
+        "failures": failures,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Hot-path resolution: explicit override > cache hit > proven-legal default
+# ---------------------------------------------------------------------------
+def resolve_block_config(
+    kind: str,
+    shape: tuple[int, ...],
+    fmt: EMFormat,
+    grouping: str = "nc",
+    *,
+    k_block: int | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    cache: TuneCache | None = None,
+) -> BlockConfig:
+    """Resolve the tiling for one kernel call — pure lookup, never times.
+
+    Field-level precedence: an explicit non-``None`` ``k_block`` /
+    ``block_m`` / ``block_n`` overrides the cached winner, which overrides
+    the static default.  ``k_block`` in particular is *numerics* (the
+    scaling-group width), so callers that pin it keep their quantization
+    semantics even when the cache's winner searched a different width.
+    """
+    cache = cache if cache is not None else get_cache()
+    config = cache.get(cache_key(kind, shape, fmt, grouping))
+    if config is None:
+        config = default_block_config(
+            shape=shape, fmt=fmt,
+            k_block=k_block if k_block is not None else 128,
+            grouping=grouping,
+        )
+    over = {}
+    if k_block is not None and k_block != config.k_block:
+        over["k_block"] = k_block
+    if block_m is not None:
+        over["block_m"] = block_m
+    if block_n is not None:
+        over["block_n"] = block_n
+    return config.replace(**over) if over else config
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.kernels.autotune", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--tune", action="store_true",
+                    help="search + time the registry shapes, persist winners")
+    ap.add_argument("--check", action="store_true",
+                    help="CI mode: every registry shape cached and every "
+                         "cached winner still proves legal; exit 1 otherwise")
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="cache file (default: committed seed for --check; "
+                         f"$%s or %s for --tune)" % (
+                             CACHE_ENV_VAR, DEFAULT_CACHE_PATH))
+    ap.add_argument("--force", action="store_true",
+                    help="re-time even on a cache hit")
+    args = ap.parse_args(argv)
+    if not (args.tune or args.check):
+        ap.error("pick --tune and/or --check")
+
+    rc = 0
+    if args.tune:
+        path = args.cache or os.environ.get(CACHE_ENV_VAR, DEFAULT_CACHE_PATH)
+        cache = TuneCache.load(path)
+        for w in cache.load_warnings:
+            print(f"warning: {w}", file=sys.stderr)
+        winners = tune_all(cache, force=args.force, log=print)
+        out = cache.save(path)
+        print(f"tuned {len(winners)} shape(s) -> {out}")
+
+    if args.check:
+        path = args.cache or SEED_CACHE_PATH
+        cache = TuneCache.load(path)
+        report = check_cache(cache)
+        for w in report["load_warnings"]:
+            print(f"warning: {w}", file=sys.stderr)
+        print(f"checked {report['verified']} cached winner(s) in {path}; "
+              f"{len(report['required_specs'])} registry spec(s) required")
+        if not report["ok"]:
+            print("TUNING-CACHE CHECK FAILURES:", file=sys.stderr)
+            for f in report["failures"]:
+                print(f"  - {f}", file=sys.stderr)
+            rc = 1
+        else:
+            print("tuning cache: OK")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,10 +23,15 @@ backend pair.  ``lowbit_conv_fused`` binds the Pallas kernels;
 oracles from :mod:`repro.kernels.ref` through the *same* layout/padding
 code, so kernel-vs-oracle tests assert bit-identical outputs and gradients.
 
+``QuantConfig.grouping`` is honored end to end: each GEMM quantizes its
+operands in the matmul analogue of the paper's Table IV layout ("nc" per
+(row, k-block), "c" per k-block shared across rows, "n" per row/column,
+"none" tensor-wise) and the Pallas GEMM consumes the matching compact
+group-scale layout.  Output tilings left unset on the config resolve
+through the autotuner cache (:mod:`repro.kernels.autotune`).
+
 Known scope limits (tracked in ROADMAP): im2col is materialized (a fused
-implicit-GEMM walk of the activation is the follow-up), and the scaling
-grouping is always the k-block "nc" analogue regardless of
-``QuantConfig.grouping``.
+implicit-GEMM walk of the activation is the follow-up).
 """
 from __future__ import annotations
 
@@ -60,30 +65,36 @@ __all__ = [
 class QDBackend(NamedTuple):
     """A quantized-domain GEMM implementation.
 
-    ``quantize(x2d, fmt, k_block, gs_fmt, key, block_m, interpret)``
-        -> (codes u8 (M, K), s_g f32 (M, K/kb), s_t f32 scalar)
-    ``matmul(xc, xsg, xst, wc, wsg, wst, fmt, k_block, bm, bn, interpret)``
-        -> f32 (M, N)
+    ``quantize(x2d, fmt, k_block, gs_fmt, key, block_m, grouping, interpret)``
+        -> (codes u8 (M, K), s_g f32 in the grouping's compact layout,
+            s_t f32 scalar)
+    ``matmul(xc, xsg, xst, wc, wsg, wst, fmt, k_block, bm, bn, grouping,
+    interpret)`` -> f32 (M, N)
     """
 
     quantize: Callable
     matmul: Callable
 
 
-def _pallas_quantize(x2d, fmt, k_block, gs_fmt, key, block_m, interpret):
+def _pallas_quantize(x2d, fmt, k_block, gs_fmt, key, block_m, grouping,
+                     interpret):
     return mls_quantize_pallas(
-        x2d, fmt, k_block, gs_fmt, key, block_m=block_m, interpret=interpret
+        x2d, fmt, k_block, gs_fmt, key, block_m=block_m, interpret=interpret,
+        grouping=grouping,
     )
 
 
-def _pallas_matmul(xc, xsg, xst, wc, wsg, wst, fmt, k_block, bm, bn, interpret):
+def _pallas_matmul(xc, xsg, xst, wc, wsg, wst, fmt, k_block, bm, bn, grouping,
+                   interpret):
     return mls_matmul_pallas(
         xc, xsg, xst, wc, wsg, wst, fmt,
-        k_block=k_block, block_m=bm, block_n=bn, interpret=interpret,
+        k_block=k_block, block_m=bm, block_n=bn, grouping=grouping,
+        interpret=interpret,
     )
 
 
-def _ref_quantize(x2d, fmt, k_block, gs_fmt, key, block_m, interpret):
+def _ref_quantize(x2d, fmt, k_block, gs_fmt, key, block_m, grouping,
+                  interpret):
     # mirror the kernel's stochastic-rounding source exactly: uint8 draws
     # from `key`, and the r = 127 (~nearest) constant when key is None.
     if key is None:
@@ -92,10 +103,13 @@ def _ref_quantize(x2d, fmt, k_block, gs_fmt, key, block_m, interpret):
         r_u8 = jax.random.randint(key, x2d.shape, 0, 256, dtype=jnp.int32).astype(
             jnp.uint8
         )
-    return quantize_ref(x2d, fmt, k_block, gs_fmt=gs_fmt, r_u8=r_u8)
+    return quantize_ref(
+        x2d, fmt, k_block, gs_fmt=gs_fmt, r_u8=r_u8, grouping=grouping
+    )
 
 
-def _ref_matmul(xc, xsg, xst, wc, wsg, wst, fmt, k_block, bm, bn, interpret):
+def _ref_matmul(xc, xsg, xst, wc, wsg, wst, fmt, k_block, bm, bn, grouping,
+                interpret):
     return mls_matmul_ref(xc, xsg, xst, wc, wsg, wst, fmt, k_block)
 
 
@@ -103,11 +117,10 @@ PALLAS_BACKEND = QDBackend(_pallas_quantize, _pallas_matmul)
 REF_BACKEND = QDBackend(_ref_quantize, _ref_matmul)
 
 
-def _interpret(cfg: QuantConfig) -> bool:
-    """Pallas interpret mode: Mosaic on TPU, interpreter everywhere else."""
-    if cfg.pallas_interpret is not None:
-        return cfg.pallas_interpret
-    return jax.default_backend() != "tpu"
+def _interpret(cfg: QuantConfig) -> bool | None:
+    """Per-config interpret override; ``None`` defers to the process-wide
+    switch (:func:`repro.kernels.runtime.resolve_interpret`)."""
+    return cfg.pallas_interpret
 
 
 # ---------------------------------------------------------------------------
@@ -130,33 +143,48 @@ def qd_gemm(
     fmt: EMFormat,
     gs_fmt: EMFormat = GS_FMT_DEFAULT,
     k_block: int = 128,
-    block_m: int = 128,
-    block_n: int = 128,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    grouping: str = "nc",
     backend: QDBackend = PALLAS_BACKEND,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Dynamically quantize ``x (M,K)`` / ``w (K,N)`` and contract.
 
-    Both operands are zero-padded to tile/group multiples (exact: padded
-    codes are 0 so their products vanish, and zero rows/columns are cropped
-    from the output).  The weight operand is quantized transposed so its
-    scaling groups run along K, then its codes/scales are transposed into
-    the (K, N) layout the GEMM consumes.
+    Scaling groups follow ``grouping`` on both operands (each along its own
+    contraction axis).  Output tiles left at ``None`` resolve through the
+    autotuner cache on the *logical* (M, K, N) shape (explicit override >
+    cache hit > proven-legal default).  Both operands are zero-padded to
+    tile/group multiples (exact: padded codes are 0 so their products
+    vanish, zero rows/columns are cropped from the output, and zero rows
+    never raise a cross-row group maximum).  The weight operand is
+    quantized transposed so its scaling groups run along K, then its
+    codes/scales are transposed into the (K, N)-oriented layout the GEMM
+    consumes (a plain transpose is exactly the GEMM-side compact layout
+    for every grouping).
     """
     M, K = x2d.shape
     K2, N = w2d.shape
     assert K == K2, (x2d.shape, w2d.shape)
+    if block_m is None or block_n is None:
+        from .autotune import resolve_block_config  # lazy: avoids a cycle
+
+        cfg = resolve_block_config(
+            "gemm", (M, K, N), fmt, grouping,
+            k_block=k_block, block_m=block_m, block_n=block_n,
+        )
+        block_m, block_n = cfg.block_m, cfg.block_n
     xp = _pad_to(x2d.astype(jnp.float32), block_m, k_block)
     wp = _pad_to(w2d.astype(jnp.float32), k_block, block_n)
     xc, xsg, xst = backend.quantize(
-        xp, fmt, k_block, gs_fmt, key_x, block_m, interpret
+        xp, fmt, k_block, gs_fmt, key_x, block_m, grouping, interpret
     )
     wc, wsgT, wst = backend.quantize(
-        wp.T, fmt, k_block, gs_fmt, key_w, block_n, interpret
+        wp.T, fmt, k_block, gs_fmt, key_w, block_n, grouping, interpret
     )
     y = backend.matmul(
         xc, xsg, xst, wc.T, wsgT.T, wst, fmt, k_block, block_m, block_n,
-        interpret,
+        grouping, interpret,
     )
     return y[:M, :N]
 
@@ -203,6 +231,7 @@ def _col2im(dcols: jax.Array, x_shape, ksize, stride, padding, out_hw):
 def _gemm_kwargs(cfg: QuantConfig, backend: QDBackend):
     return dict(
         fmt=cfg.fmt, gs_fmt=cfg.gs_fmt, k_block=cfg.k_block,
+        block_m=cfg.block_m, block_n=cfg.block_n, grouping=cfg.grouping,
         backend=backend, interpret=_interpret(cfg),
     )
 

@@ -19,6 +19,15 @@ adapted to TPU as a tiled matmul:
 
 Grid: ``(M/bm, N/bn, K/bk)`` with the contraction innermost; ``bk`` equals
 the scaling-group width so group boundaries coincide with VMEM tiles.
+
+**Grouping is a first-class kernel parameter** (paper Table IV): the
+group-scale operands arrive in the compact layout of the grouping and the
+BlockSpecs are reshaped per layout — ``"nc"`` (per row x k-block / k-block
+x column), ``"c"`` (per k-block, shared across rows/columns), ``"n"`` (per
+row / per column, constant along K) or ``"none"`` (all-ones, the tensor
+scale carries everything).  See :func:`sg_shapes` for the exact layouts.
+The kernel body is layout-generic: the scale blocks broadcast against the
+(bm, bn) partial-product tile.
 """
 from __future__ import annotations
 
@@ -30,6 +39,52 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import EMFormat
+from .runtime import resolve_interpret
+
+GROUPINGS = ("nc", "c", "n", "none")
+
+
+def sg_shapes(
+    grouping: str, M: int, N: int, n_kb: int
+) -> tuple[tuple[int, int], tuple[int, int]]:
+    """Compact group-scale layouts ``(x_sg, w_sg)`` for an (M, K, N) GEMM.
+
+    ``"nc"``: x (M, K/kb), w (K/kb, N) — one scale per (row, k-block) /
+    (k-block, column); ``"c"``: (1, K/kb) / (K/kb, 1); ``"n"``: (M, 1) /
+    (1, N); ``"none"``: (1, 1) / (1, 1).
+    """
+    if grouping == "nc":
+        return (M, n_kb), (n_kb, N)
+    if grouping == "c":
+        return (1, n_kb), (n_kb, 1)
+    if grouping == "n":
+        return (M, 1), (1, N)
+    if grouping == "none":
+        return (1, 1), (1, 1)
+    raise ValueError(f"unknown grouping {grouping!r}; expected {GROUPINGS}")
+
+
+def _sg_specs(grouping: str, block_m: int, block_n: int):
+    """BlockSpecs delivering the right scale slice per grid point."""
+    if grouping == "nc":
+        return (
+            pl.BlockSpec((block_m, 1), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (k, j)),
+        )
+    if grouping == "c":
+        return (
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (k, 0)),
+        )
+    if grouping == "n":
+        return (
+            pl.BlockSpec((block_m, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        )
+    return (  # "none"
+        pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+    )
 
 
 def _decode_frac(codes, fmt: EMFormat):
@@ -60,13 +115,33 @@ def _kernel(
     # Intra-group integer MACs on the MXU (exact in fp32, see module doc).
     p = jnp.dot(fx, fw, preferred_element_type=jnp.float32)  # (bm, bn)
     # Inter-group scale S_p = s_g^x ⊗ s_g^w (shift-add in HW, exact here).
-    sp = xsg_ref[:, 0][:, None] * wsg_ref[0, :][None, :]
+    # The scale blocks are (bm|1, 1) x (1, bn|1) depending on the grouping
+    # layout; the product broadcasts against the (bm, bn) partial tile.
+    sp = xsg_ref[...] * wsg_ref[...]
     acc_ref[...] += p * sp
 
     @pl.when(k == n_k - 1)
     def _done():
         unit = 2.0 ** (2 * (fmt.e_min - fmt.m))
         out_ref[...] = acc_ref[...] * (st_ref[0, 0] * unit)
+
+
+def _nearest_legal_block(extent: int, block: int) -> int:
+    """Largest divisor of ``extent`` that is <= ``block`` (for error text)."""
+    for b in range(min(block, extent), 0, -1):
+        if extent % b == 0:
+            return b
+    return 1
+
+
+def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    p = (-x.shape[0]) % mult
+    return jnp.pad(x, ((0, p), (0, 0))) if p else x
+
+
+def _pad_cols(x: jax.Array, mult: int) -> jax.Array:
+    p = (-x.shape[1]) % mult
+    return jnp.pad(x, ((0, 0), (0, p))) if p else x
 
 
 def mls_matmul_pallas(
@@ -80,33 +155,72 @@ def mls_matmul_pallas(
     k_block: int = 128,
     block_m: int = 128,
     block_n: int = 128,
-    interpret: bool = True,
+    grouping: str = "nc",
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Quantized-domain GEMM: x (M, K) @ w (K, N) -> fp32 (M, N).
 
-    ``x_sg``: (M, K/k_block) group scales; ``w_sg``: (K/k_block, N).
+    Group scales arrive in the compact layout of ``grouping`` (see
+    :func:`sg_shapes`); ``"nc"`` is the paper's default: ``x_sg``
+    (M, K/k_block), ``w_sg`` (K/k_block, N).
+
+    Ragged ``M``/``N`` (not multiples of the clamped block) are handled by
+    zero-padding the codes and slicing the output — exact, since padded
+    codes decode to 0 and contribute nothing.  A ``K`` that is not a
+    multiple of ``k_block`` is a group-layout mismatch (the scales would
+    not line up) and raises ``ValueError``.
     """
     M, K = x_codes.shape
     K2, N = w_codes.shape
-    assert K == K2 and K % k_block == 0
+    assert K == K2, (x_codes.shape, w_codes.shape)
+    if K % k_block:
+        raise ValueError(
+            f"mls_matmul_pallas: contraction K={K} of shape "
+            f"({M}, {K}, {N}) is not a multiple of k_block={k_block} "
+            f"(group boundaries would not align); nearest legal k_block "
+            f"is {_nearest_legal_block(K, k_block)} — re-quantize with a "
+            f"dividing k_block or pad K to a multiple before quantizing"
+        )
     nkb = K // k_block
     block_m = min(block_m, M)
     block_n = min(block_n, N)
-    assert M % block_m == 0 and N % block_n == 0
+    exp_xsg, exp_wsg = sg_shapes(grouping, M, N, nkb)
+    if tuple(x_sg.shape) != exp_xsg or tuple(w_sg.shape) != exp_wsg:
+        raise ValueError(
+            f"group-scale layout mismatch for grouping={grouping!r}: "
+            f"expected x_sg {exp_xsg} / w_sg {exp_wsg}, got "
+            f"{tuple(x_sg.shape)} / {tuple(w_sg.shape)}"
+        )
+
+    # Pad ragged M/N tails to block multiples (exact: zero codes decode to
+    # 0; padded scale rows/cols are 1.0 so no inf/nan can leak into 0 * sp).
+    pm, pn = (-M) % block_m, (-N) % block_n
+    if pm:
+        x_codes = _pad_rows(x_codes, block_m)
+        if grouping in ("nc", "n"):
+            x_sg = jnp.pad(x_sg, ((0, pm), (0, 0)), constant_values=1.0)
+    if pn:
+        w_codes = _pad_cols(w_codes, block_n)
+        if grouping in ("nc", "n"):
+            w_sg = jnp.pad(w_sg, ((0, 0), (0, pn)), constant_values=1.0)
+    Mp, Np = M + pm, N + pn
+
     st = (x_st * w_st).astype(jnp.float32).reshape(1, 1)
+    xsg_spec, wsg_spec = _sg_specs(grouping, block_m, block_n)
     kernel = functools.partial(_kernel, fmt=fmt, n_k=nkb)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(M // block_m, N // block_n, nkb),
+        grid=(Mp // block_m, Np // block_n, nkb),
         in_specs=[
             pl.BlockSpec((block_m, k_block), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_m, 1), lambda i, j, k: (i, k)),
+            xsg_spec,
             pl.BlockSpec((k_block, block_n), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, block_n), lambda i, j, k: (k, j)),
+            wsg_spec,
             pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x_codes, x_sg, w_codes, w_sg, st)
+    return out[:M, :N] if (pm or pn) else out

@@ -3,15 +3,27 @@
 One pass over the operand computes group maxima, the hardware-friendly
 ``<Eg,Mg>`` group scales (ceil-rounded), and the packed ``<Ex,Mx>`` element
 codes with stochastic rounding — writing **1 byte per element** plus one
-scale per ``k_block`` elements back to HBM (vs 4 bytes for the fp32 input):
-the memory-traffic reduction that makes dynamic quantization cheap on TPU.
+scale per group back to HBM (vs 4 bytes for the fp32 input): the
+memory-traffic reduction that makes dynamic quantization cheap on TPU.
 
 The tensor-wise scale ``s_t`` is a global reduction and is computed ahead of
 the kernel (a cheap fused max-reduce); it enters the kernel via SMEM.
 
+**Grouping** (paper Table IV) selects the scaling-group layout of a 2-D
+``(M, K)`` operand (the GEMM orientation: rows x contraction):
+
+* ``"nc"`` — one group per (row, ``k_block``-wide contraction block);
+  scales (M, K/k_block), computed inside the kernel (the default).
+* ``"n"``  — one group per row; scales (M, 1), computed inside the kernel
+  (a single full-width group per row block).
+* ``"c"``  — one group per contraction block shared by *all* rows; scales
+  (1, K/k_block).  The group max crosses row-block programs, so the compact
+  scales are precomputed by a fused XLA reduction (same exact
+  ``quantize_group_scale`` math) and the kernel only quantizes elements.
+* ``"none"`` — tensor-wise only; group scales are exactly 1 (shape (1, 1)).
+
 Grid: one program per ``block_m`` rows; each program statically loops over
-the ``K // k_block`` scaling groups of its rows, keeping the whole row block
-in VMEM.
+the scaling groups of its rows, keeping the whole row block in VMEM.
 """
 from __future__ import annotations
 
@@ -22,8 +34,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.formats import EMFormat, GS_FMT_DEFAULT
+from repro.core.quantize import quantize_group_scale
+from .runtime import resolve_interpret
 
 DEFAULT_BLOCK_M = 256
+
+GROUPINGS = ("nc", "c", "n", "none")
 
 
 def _exponent_fraction(x):
@@ -38,27 +54,11 @@ def _exponent_fraction(x):
     return e, frac
 
 
-def _quantize_block(x, r_u8, s_t, fmt: EMFormat, gs_fmt: EMFormat):
-    """Quantize one (block_m, k_block) group column. Returns (codes, s_g)."""
+def _element_codes(x, r_u8, denom, fmt: EMFormat):
+    """Packed codes for one block given its scale denominator (Alg. 2
+    l.9-16).  ``denom`` broadcasts against ``x`` ((bm, 1), (1,) or scalar)."""
     absx = jnp.abs(x)
     sign_bit = (x < 0).astype(jnp.int32)
-
-    # ---- group scale (one per row of the block), Alg. 2 l.2-8 ------------
-    s_r = jnp.max(absx, axis=1, keepdims=True)  # (bm, 1)
-    s_gf = s_r / s_t
-    eg_min = max(gs_fmt.e_min, -120)
-    e_g, frac_g = _exponent_fraction(s_gf)
-    too_small = e_g < eg_min
-    e_g = jnp.clip(e_g, eg_min, 0)
-    frac_g = jnp.where(too_small, 1.0, frac_g)
-    man_g = jnp.ceil((frac_g - 1.0) * 2.0**gs_fmt.m)
-    overflow = man_g >= 2**gs_fmt.m
-    man_g = jnp.where(overflow, 0.0, man_g)
-    e_g = jnp.clip(jnp.where(overflow, e_g + 1, e_g), eg_min, 0)
-    s_g = (1.0 + man_g * 2.0**-gs_fmt.m) * jnp.exp2(e_g.astype(jnp.float32))
-
-    # ---- elements, Alg. 2 l.9-16 ------------------------------------------
-    denom = s_t * s_g
     x_f = jnp.where(denom > 0, absx / jnp.where(denom > 0, denom, 1.0), 0.0)
     e_x, _ = _exponent_fraction(x_f)
     e_eff = jnp.clip(e_x, fmt.e_min, -1)
@@ -77,22 +77,63 @@ def _quantize_block(x, r_u8, s_t, fmt: EMFormat, gs_fmt: EMFormat):
         jnp.floor(xbar * 2.0 ** (fmt.m - fmt.e_min) + 0.5),
     ).astype(jnp.int32)
     exp_stored = jnp.where(is_normal, -e2, 0)
-    codes = (
+    return (
         (sign_bit << (fmt.e + fmt.m)) | (exp_stored << fmt.m) | man
     ).astype(jnp.uint8)
+
+
+def _quantize_block(x, r_u8, s_t, fmt: EMFormat, gs_fmt: EMFormat):
+    """Quantize one (block_m, group_width) group column -> (codes, s_g)."""
+    absx = jnp.abs(x)
+
+    # ---- group scale (one per row of the block), Alg. 2 l.2-8 ------------
+    s_r = jnp.max(absx, axis=1, keepdims=True)  # (bm, 1)
+    s_gf = s_r / s_t
+    eg_min = max(gs_fmt.e_min, -120)
+    e_g, frac_g = _exponent_fraction(s_gf)
+    too_small = e_g < eg_min
+    e_g = jnp.clip(e_g, eg_min, 0)
+    frac_g = jnp.where(too_small, 1.0, frac_g)
+    man_g = jnp.ceil((frac_g - 1.0) * 2.0**gs_fmt.m)
+    overflow = man_g >= 2**gs_fmt.m
+    man_g = jnp.where(overflow, 0.0, man_g)
+    e_g = jnp.clip(jnp.where(overflow, e_g + 1, e_g), eg_min, 0)
+    s_g = (1.0 + man_g * 2.0**-gs_fmt.m) * jnp.exp2(e_g.astype(jnp.float32))
+
+    codes = _element_codes(x, r_u8, s_t * s_g, fmt)
     return codes, s_g[:, 0]
 
 
-def _kernel(x_ref, r_ref, st_ref, codes_ref, sg_ref, *, fmt, gs_fmt, k_block):
+def _kernel_rowwise(
+    x_ref, r_ref, st_ref, codes_ref, sg_ref, *, fmt, gs_fmt, group_width
+):
+    """In-kernel group scales: ``"nc"`` (group_width == k_block) and
+    ``"n"`` (group_width == K: one group per row)."""
     s_t = st_ref[0, 0]
-    n_groups = x_ref.shape[1] // k_block
+    n_groups = x_ref.shape[1] // group_width
     for g in range(n_groups):  # static loop over scaling groups
-        sl = pl.dslice(g * k_block, k_block)
+        sl = pl.dslice(g * group_width, group_width)
         codes, s_g = _quantize_block(
             x_ref[:, sl], r_ref[:, sl], s_t, fmt, gs_fmt
         )
         codes_ref[:, sl] = codes
         sg_ref[:, pl.dslice(g, 1)] = s_g[:, None]
+
+
+def _kernel_given_sg(
+    x_ref, r_ref, st_ref, sg_ref, codes_ref, *, fmt, k_block
+):
+    """Element quantization against precomputed compact scales (``"c"``:
+    sg (1, K/k_block); ``"none"``: sg (1, 1) == 1)."""
+    s_t = st_ref[0, 0]
+    n_groups = x_ref.shape[1] // k_block
+    per_group = sg_ref.shape[1] > 1
+    for g in range(n_groups):
+        sl = pl.dslice(g * k_block, k_block)
+        s_g = sg_ref[0, g] if per_group else sg_ref[0, 0]
+        codes_ref[:, sl] = _element_codes(
+            x_ref[:, sl], r_ref[:, sl], s_t * s_g, fmt
+        )
 
 
 def mls_quantize_pallas(
@@ -102,16 +143,32 @@ def mls_quantize_pallas(
     gs_fmt: EMFormat = GS_FMT_DEFAULT,
     key: jax.Array | None = None,
     block_m: int = DEFAULT_BLOCK_M,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    grouping: str = "nc",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Quantize a 2-D ``(M, K)`` operand to packed MLS codes.
 
-    Returns ``(codes uint8 (M, K), s_g f32 (M, K/k_block), s_t f32 scalar)``.
+    Returns ``(codes uint8 (M, K), s_g f32, s_t f32 scalar)`` with ``s_g``
+    in the compact layout of ``grouping`` (see the module docstring):
+    (M, K/k_block), (1, K/k_block), (M, 1) or (1, 1).
+
+    A ragged row count (``M`` not a multiple of the clamped ``block_m``) is
+    zero-padded and sliced back — exact: zero rows quantize to zero codes
+    and never contribute to any cross-row group maximum.  ``K`` must be a
+    multiple of ``k_block`` (group boundaries), else ``ValueError``.
     """
+    if grouping not in GROUPINGS:
+        raise ValueError(
+            f"unknown grouping {grouping!r}; expected one of {GROUPINGS}")
     M, K = x.shape
-    assert K % k_block == 0, (K, k_block)
+    if K % k_block:
+        raise ValueError(
+            f"mls_quantize_pallas: K={K} not a multiple of k_block="
+            f"{k_block}; pad the operand (the fused ops do) or pick a "
+            f"dividing k_block"
+        )
     block_m = min(block_m, M)
-    assert M % block_m == 0, (M, block_m)
+    interpret = resolve_interpret(interpret)
     x = x.astype(jnp.float32)
     s_t = jnp.max(jnp.abs(x))
     s_t = jnp.where(s_t > 0, s_t, 1.0).reshape(1, 1)
@@ -121,24 +178,61 @@ def mls_quantize_pallas(
         )
     else:
         r_u8 = jnp.full(x.shape, 127, dtype=jnp.uint8)  # r = -0.002 ~ nearest
+
+    pm = (-M) % block_m
+    if pm:
+        x = jnp.pad(x, ((0, pm), (0, 0)))
+        r_u8 = jnp.pad(r_u8, ((0, pm), (0, 0)), constant_values=127)
+    Mp = M + pm
     nkb = K // k_block
-    kernel = functools.partial(_kernel, fmt=fmt, gs_fmt=gs_fmt, k_block=k_block)
-    codes, s_g = pl.pallas_call(
+
+    if grouping in ("nc", "n"):
+        group_width = k_block if grouping == "nc" else K
+        n_sg = nkb if grouping == "nc" else 1
+        kernel = functools.partial(
+            _kernel_rowwise, fmt=fmt, gs_fmt=gs_fmt, group_width=group_width)
+        codes, s_g = pl.pallas_call(
+            kernel,
+            grid=(Mp // block_m,),
+            in_specs=[
+                pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+                pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+                pl.BlockSpec((block_m, n_sg), lambda i: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((Mp, K), jnp.uint8),
+                jax.ShapeDtypeStruct((Mp, n_sg), jnp.float32),
+            ],
+            interpret=interpret,
+        )(x, r_u8, s_t)
+        if pm:
+            codes, s_g = codes[:M], s_g[:M]
+        return codes, s_g, s_t[0, 0]
+
+    # "c" / "none": compact scales precomputed (exact quantize_group_scale
+    # math; for "c" the group max crosses row-block programs).
+    if grouping == "c":
+        s_r = jnp.max(jnp.abs(x), axis=0).reshape(1, nkb, k_block).max(axis=2)
+        s_g, _, _ = quantize_group_scale(s_r / s_t[0, 0], gs_fmt)  # (1, nkb)
+    else:  # "none"
+        s_g = jnp.ones((1, 1), jnp.float32)
+    n_sg = s_g.shape[1]
+    kernel = functools.partial(_kernel_given_sg, fmt=fmt, k_block=k_block)
+    codes = pl.pallas_call(
         kernel,
-        grid=(M // block_m,),
+        grid=(Mp // block_m,),
         in_specs=[
             pl.BlockSpec((block_m, K), lambda i: (i, 0)),
             pl.BlockSpec((block_m, K), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_sg), lambda i: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((block_m, K), lambda i: (i, 0)),
-            pl.BlockSpec((block_m, nkb), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((M, K), jnp.uint8),
-            jax.ShapeDtypeStruct((M, nkb), jnp.float32),
-        ],
+        out_specs=pl.BlockSpec((block_m, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, K), jnp.uint8),
         interpret=interpret,
-    )(x, r_u8, s_t)
-    return codes, s_g, s_t[0, 0]
+    )(x, r_u8, s_t, s_g)
+    return (codes[:M] if pm else codes), s_g, s_t[0, 0]

@@ -2,8 +2,11 @@
 
 ``lowbit_matmul_fused`` is the end-to-end quantized GEMM: both float
 operands are dynamically quantized by the Pallas quantization kernel and
-contracted by the quantized-domain Pallas GEMM.  On CPU the kernels run in
-interpret mode (bit-exact semantics); on TPU they compile to Mosaic.
+contracted by the quantized-domain Pallas GEMM.  Interpret mode resolves
+through :mod:`repro.kernels.runtime` (explicit > ``REPRO_PALLAS_INTERPRET``
+> platform auto), and tilings left at ``None`` resolve through the
+autotuner cache (explicit override > cache hit > proven-legal default; see
+:mod:`repro.kernels.autotune`).
 """
 from __future__ import annotations
 
@@ -27,7 +30,10 @@ def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
 
 @partial(
     jax.jit,
-    static_argnames=("fmt", "gs_fmt", "k_block", "block_m", "block_n", "interpret"),
+    static_argnames=(
+        "fmt", "gs_fmt", "k_block", "block_m", "block_n", "grouping",
+        "interpret",
+    ),
 )
 def lowbit_matmul_fused(
     x: jax.Array,
@@ -37,32 +43,50 @@ def lowbit_matmul_fused(
     fmt: EMFormat,
     gs_fmt: EMFormat = GS_FMT_DEFAULT,
     k_block: int = 128,
-    block_m: int = 128,
-    block_n: int = 128,
-    interpret: bool = True,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    grouping: str = "nc",
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Dynamically quantize ``x (M,K)`` and ``w (K,N)`` and multiply.
 
-    Shapes are padded to tile multiples internally; the result is fp32
-    ``(M, N)`` and is bit-identical to the pure-jnp oracle pipeline
+    Scaling groups follow ``grouping`` (paper Table IV): ``"nc"`` per
+    (row, k-block), ``"c"`` per k-block shared across rows, ``"n"`` per
+    row/column, ``"none"`` tensor-wise only.  Output tiles left at ``None``
+    resolve through the autotuner cache.  Shapes are padded to tile
+    multiples internally; the result is fp32 ``(M, N)`` and is
+    bit-identical to the pure-jnp oracle pipeline
     (``kernels.ref.quantize_ref`` + ``kernels.ref.mls_matmul_ref``).
     """
     M, K = x.shape
     K2, N = w.shape
     assert K == K2
+    if block_m is None or block_n is None:
+        from .autotune import resolve_block_config  # lazy: avoids a cycle
+
+        cfg = resolve_block_config(
+            "gemm", (M, K, N), fmt, grouping,
+            k_block=k_block, block_m=block_m, block_n=block_n,
+        )
+        block_m, block_n = cfg.block_m, cfg.block_n
     xp = _pad_to(x.astype(jnp.float32), block_m, k_block)
     wp = _pad_to(w.astype(jnp.float32), k_block, block_n)
     kx, kw = (None, None) if key is None else tuple(jax.random.split(key))
     xc, xsg, xst = mls_quantize_pallas(
-        xp, fmt, k_block, gs_fmt, kx, block_m=block_m, interpret=interpret
+        xp, fmt, k_block, gs_fmt, kx, block_m=block_m, interpret=interpret,
+        grouping=grouping,
     )
     wc, wsgT, wst = mls_quantize_pallas(
-        wp.T, fmt, k_block, gs_fmt, kw, block_m=block_n, interpret=interpret
+        wp.T, fmt, k_block, gs_fmt, kw, block_m=block_n, interpret=interpret,
+        grouping=grouping,
     )
-    # weight was quantized transposed (groups per (column, k-block)); the
-    # GEMM kernel wants codes (K, N) and scales (K/kb, N)
+    # weight was quantized transposed (groups along its K axis); the GEMM
+    # kernel wants codes (K, N) and the transposed compact scale layout —
+    # for every grouping the plain transpose is exactly that layout:
+    # "nc" (N,K/kb)->(K/kb,N), "c" (1,K/kb)->(K/kb,1), "n" (N,1)->(1,N).
     y = mls_matmul_pallas(
         xc, xsg, xst, wc.T, wsgT.T, wst, fmt,
-        k_block=k_block, block_m=block_m, block_n=block_n, interpret=interpret,
+        k_block=k_block, block_m=block_m, block_n=block_n,
+        grouping=grouping, interpret=interpret,
     )
     return y[:M, :N]

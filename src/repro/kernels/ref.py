@@ -20,28 +20,45 @@ from repro.core.quantize import (
 )
 
 
+def grouping_spec(grouping: str, k_block: int) -> GroupSpec:
+    """GroupSpec of a 2-D (rows, contraction) operand for one grouping."""
+    if grouping == "nc":
+        return GroupSpec((1, k_block))
+    if grouping == "c":
+        return GroupSpec((None, k_block))
+    if grouping == "n":
+        return GroupSpec((1, None))
+    if grouping == "none":
+        return GroupSpec((None, None))
+    raise ValueError(f"unknown grouping {grouping!r}")
+
+
 def quantize_ref(
     x: jax.Array,
     fmt: EMFormat,
     k_block: int,
     gs_fmt: EMFormat = GS_FMT_DEFAULT,
     r_u8: jax.Array | None = None,
+    grouping: str = "nc",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Reference dynamic quantization of a 2-D operand ``(M, K)``.
 
-    Groups are ``(row, k-block)``.  ``r_u8`` is the uint8 stochastic-rounding
-    source the kernel consumes (``None`` -> round-to-nearest).  Returns
-    ``(codes_u8, s_g_f32, s_t_f32_scalar)`` with ``codes`` the packed
-    sign/exp/man elements and ``s_g`` of shape ``(M, K // k_block)``.
+    Scaling groups follow ``grouping`` (default ``"nc"``: one group per
+    (row, k-block)).  ``r_u8`` is the uint8 stochastic-rounding source the
+    kernel consumes (``None`` -> round-to-nearest).  Returns ``(codes_u8,
+    s_g_f32, s_t_f32_scalar)`` with ``codes`` the packed sign/exp/man
+    elements and ``s_g`` in the grouping's compact layout (``"nc"``:
+    ``(M, K // k_block)``; see ``kernels.mls_matmul.sg_shapes``).
     """
-    assert x.ndim == 2 and x.shape[1] % k_block == 0
-    key = None
+    assert x.ndim == 2
+    if grouping in ("nc", "c"):
+        assert x.shape[1] % k_block == 0
     if r_u8 is not None:
         # mirror the kernel: u = (r + 0.5)/256 - 0.5 in (-0.5, 0.5)
         r = (r_u8.astype(jnp.float32) + 0.5) / 256.0 - 0.5
     else:
         r = None
-    spec = GroupSpec((1, k_block))
+    spec = grouping_spec(grouping, k_block)
     # re-implement mls_quantize but with the supplied rounding tensor
     from repro.core.quantize import (
         broadcast_groups,
@@ -97,7 +114,10 @@ def mls_matmul_ref(
 ) -> jax.Array:
     """Quantized-domain GEMM oracle (paper Eq. 6-8).
 
-    x: (M, K) codes with s_g (M, K/kb);  w: (K, N) codes with s_g (K/kb, N).
+    x: (M, K) codes;  w: (K, N) codes.  The group scales may arrive in any
+    compact grouping layout (``sg_shapes``) — they are broadcast to the
+    ``"nc"`` resolution (M, K/kb) / (K/kb, N), which subsumes the coarser
+    layouts exactly.
     Intra-group: integer MAC over each k-block (exact in fp32).
     Inter-group: group-scale product (a shift-add in hardware, exact fp32
     multiply here) then fp32 accumulation — the paper's adder tree.
@@ -106,6 +126,8 @@ def mls_matmul_ref(
     K2, N = w_codes.shape
     assert K == K2 and K % k_block == 0
     nkb = K // k_block
+    x_sg = jnp.broadcast_to(x_sg, (M, nkb))
+    w_sg = jnp.broadcast_to(w_sg, (nkb, N))
     fx = decode_frac_int(x_codes, fmt).astype(jnp.float32)  # exact small ints
     fw = decode_frac_int(w_codes, fmt).astype(jnp.float32)
     fx = fx.reshape(M, nkb, k_block)

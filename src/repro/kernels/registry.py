@@ -8,8 +8,10 @@ One table, three consumers:
 * ``benchmarks/kernel_bench.py`` times the entries flagged ``bench`` on
   their example shapes, so the perf trail and the verifier agree on what
   "the shipped kernels" are;
-* the future shape-keyed autotuner (ROADMAP) will enumerate the same set
-  when searching block-size candidates.
+* the shape-keyed autotuner (:mod:`repro.kernels.autotune`) tunes each
+  entry's ``tune`` spec — the workload key ``(kind, shape, fmt,
+  grouping)`` whose winner the persistent cache must hold (CI enforces
+  this with ``python -m repro.kernels.autotune --check``).
 
 Entries build *abstract* example arguments (``jax.ShapeDtypeStruct``), so
 registering and tracing a kernel never allocates or executes anything;
@@ -25,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.formats import FMT_IMAGENET
 from repro.core.lowbit import QuantConfig
+from .autotune import TuneSpec
 from .lowbit_conv import lowbit_conv_fused, lowbit_matmul_qd
 from .mls_matmul import mls_matmul_pallas
 from .mls_quantize import mls_quantize_pallas
@@ -41,7 +44,10 @@ class KernelEntry:
     example ``ShapeDtypeStruct`` arguments.  ``needs_grad`` marks training
     ops whose custom-VJP backward GEMMs must be verified too (the verifier
     traces ``jax.vjp`` through them).  ``bench_tag`` names the example
-    shape in benchmark rows (kept stable for the perf trail).
+    shape in benchmark rows (kept stable for the perf trail).  ``tune`` is
+    the entry's autotuning workload (``None`` when another entry's spec
+    already covers the same cache key — e.g. the raw-codes GEMM is tuned
+    through the fused wrapper).
     """
 
     name: str
@@ -50,6 +56,7 @@ class KernelEntry:
     needs_grad: bool = False
     bench: bool = True
     bench_tag: str = ""
+    tune: TuneSpec | None = None
 
     def fn_and_args(self) -> tuple[Callable, tuple]:
         return self.build()
@@ -147,6 +154,7 @@ KERNEL_REGISTRY: dict[str, KernelEntry] = {
             description="fused MLS dynamic quantization (paper Alg. 2)",
             build=_build_quantize,
             bench_tag="256x512",
+            tune=TuneSpec("quantize", (256, 512), FMT_IMAGENET, 128),
         ),
         KernelEntry(
             name="mls_matmul_pallas",
@@ -154,12 +162,14 @@ KERNEL_REGISTRY: dict[str, KernelEntry] = {
             build=_build_matmul,
             bench=False,  # raw-codes timing is covered by the fused row
             bench_tag="256x512x256",
+            tune=None,  # same cache key as lowbit_matmul_fused's spec
         ),
         KernelEntry(
             name="lowbit_matmul_fused",
             description="dynamic-quantize-both-operands fused GEMM",
             build=_build_matmul_fused,
             bench_tag="256x512x256",
+            tune=TuneSpec("gemm", (256, 512, 256), FMT_IMAGENET, 128),
         ),
         KernelEntry(
             name="lowbit_conv_fused",
@@ -168,6 +178,9 @@ KERNEL_REGISTRY: dict[str, KernelEntry] = {
             build=_build_conv_fused,
             needs_grad=True,
             bench_tag="2x16x8x8_o16k3",
+            # the forward im2col GEMM of the example shape:
+            # (N*OH*OW, C*kh*kw, O) = (2*8*8, 16*3*3, 16) at k_block=32
+            tune=TuneSpec("gemm", (128, 144, 16), FMT_IMAGENET, 32),
         ),
         KernelEntry(
             name="lowbit_matmul_qd",
@@ -177,6 +190,7 @@ KERNEL_REGISTRY: dict[str, KernelEntry] = {
             needs_grad=True,
             bench=False,
             bench_tag="64x96x64",
+            tune=TuneSpec("gemm", (64, 96, 64), FMT_IMAGENET, 32),
         ),
     )
 }

@@ -1,0 +1,41 @@
+"""Process-wide Pallas execution-mode switch.
+
+Every Pallas entry point used to carry its own ``interpret: bool = True``
+default, so flipping a TPU run to compiled Mosaic meant editing call sites.
+Now all of them default to ``interpret=None`` and resolve through
+:func:`resolve_interpret` — one place, one precedence order:
+
+1. an explicit ``interpret=`` argument (or ``QuantConfig.pallas_interpret``)
+   always wins;
+2. the ``REPRO_PALLAS_INTERPRET`` environment variable, when set
+   (``0``/``false``/``no``/``off`` → Mosaic, anything else → interpreter);
+3. platform auto-detection: the interpreter everywhere except a real TPU
+   backend (interpret mode is the bit-exact default for CPU tests/CI;
+   Mosaic is only meaningful — and only correct to default to — on TPU).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["INTERPRET_ENV_VAR", "default_interpret", "resolve_interpret"]
+
+INTERPRET_ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+_FALSY = ("0", "false", "no", "off")
+
+
+def default_interpret() -> bool:
+    """Interpret mode when no explicit argument is given (env > platform)."""
+    v = os.environ.get(INTERPRET_ENV_VAR)
+    if v is not None:
+        return v.strip().lower() not in _FALSY
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(explicit: bool | None) -> bool:
+    """Resolve a per-call ``interpret`` argument (explicit > env > auto)."""
+    if explicit is not None:
+        return bool(explicit)
+    return default_interpret()

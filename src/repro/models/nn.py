@@ -103,7 +103,9 @@ def linear(p, x, qcfg: QuantConfig | None = None, key=None, wire=None):
             from repro.kernels import lowbit_matmul_qd
 
             # quantized-domain path: the FSDP wire pinning is a fake-quant
-            # concern (the Pallas path already moves 1-byte codes).
+            # concern (the Pallas path already moves 1-byte codes).  The
+            # kernels honor qcfg.grouping / block_m / block_n — unset
+            # blocks resolve per-shape through the autotuner cache.
             y = lowbit_matmul_qd(x, p["w"].astype(jnp.float32), key, qcfg)
         else:
             if wire is not None and qcfg.wire_fsdp_dim != wire:

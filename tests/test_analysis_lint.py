@@ -121,3 +121,14 @@ def test_max_value_matches_grid(e, m):
     assert grid[-1] == pytest.approx(fmt.max_value)
     assert np.all(grid <= fmt.max_value)
     assert fmt.element_bits == 1 + e + m
+
+
+def test_pallas_grouping_is_first_class_no_warning():
+    """Non-"nc" groupings are honored by the Pallas kernels now; the old
+    "silently ignores grouping" warning must be gone."""
+    for grouping in ("c", "n", "none"):
+        res = lint_quant_config(QuantConfig(
+            fmt=FMT_IMAGENET, backend="pallas", grouping=grouping,
+            k_block=128))
+        assert res.ok
+        assert not any("grouping" in w for w in res.warnings), res.warnings

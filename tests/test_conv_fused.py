@@ -173,3 +173,31 @@ def test_resnet20_pallas_backend_matches_fake_quant():
     assert all(np.isfinite(l_pl)), l_pl
     for a, b in zip(l_fq, l_pl):
         assert abs(a - b) < 0.15 * max(1.0, abs(a)), (l_fq, l_pl)
+
+
+@pytest.mark.parametrize("grouping", ["c", "n", "none"])
+def test_conv_fused_groupings_bitexact(grouping):
+    """QuantConfig.grouping flows through to the Pallas conv kernels: each
+    non-"nc" layout still matches the oracle bit-for-bit (the oracle uses
+    the same grouping), and differs from the "nc" output."""
+    cfg = _cfg(FMT_IMAGENET, grouping=grouping)
+    x = jax.random.normal(jax.random.key(20), (2, 5, 9, 9))
+    w = jax.random.normal(jax.random.key(21), (7, 5, 3, 3)) * 0.2
+    y = lowbit_conv_fused(x, w, None, (1, 1), "SAME", cfg)
+    y_ref = lowbit_conv_fused_ref(x, w, None, (1, 1), "SAME", cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+    y_nc = lowbit_conv_fused(x, w, None, (1, 1), "SAME",
+                             _cfg(FMT_IMAGENET, grouping="nc"))
+    assert np.any(np.asarray(y) != np.asarray(y_nc))
+
+
+def test_conv_fused_explicit_blocks_override_cache():
+    """cfg.block_m/block_n pin the GEMM tiling (explicit > cache) and do
+    not change the math."""
+    cfg_a = _cfg(FMT_IMAGENET, block_m=32, block_n=32)
+    cfg_b = _cfg(FMT_IMAGENET)  # cache/default resolution
+    x = jax.random.normal(jax.random.key(22), (1, 4, 8, 8))
+    w = jax.random.normal(jax.random.key(23), (6, 4, 3, 3)) * 0.2
+    y_a = lowbit_conv_fused(x, w, None, (1, 1), "SAME", cfg_a)
+    y_b = lowbit_conv_fused(x, w, None, (1, 1), "SAME", cfg_b)
+    np.testing.assert_array_equal(np.asarray(y_a), np.asarray(y_b))
