@@ -7,7 +7,10 @@ resolved from the persistent autotuner cache (``kernels/tuned/
 kernel_tune.json`` seed + local overlay) — served from the cache without
 re-timing the search.  Rows carry ``blocks``/``grouping``/``tuned`` fields
 in the JSON artifact so the perf trail records which tiling produced each
-number.
+number, plus a ``peak_hbm_bytes`` bytes-moved estimate (interpret mode has
+no HBM counters; the estimators live in ``repro.kernels.implicit_conv``).
+The im2col-vs-implicit conv comparison rows assert the implicit path moves
+>= 3x fewer bytes on the ResNet-20 CIFAR conv shape.
 
 Runs inside the ``benchmarks/run.py`` CSV driver, or standalone with a JSON
 artifact for the CI perf trail::
@@ -22,12 +25,60 @@ import time
 import jax
 
 from repro.core import FMT_IMAGENET, QuantConfig, lowbit_conv, lowbit_matmul
-from repro.kernels import KERNEL_REGISTRY, lowbit_conv_fused
+from repro.kernels import (
+    KERNEL_REGISTRY,
+    conv_geometry,
+    im2col_conv_bytes,
+    implicit_conv_bytes,
+    lowbit_conv_fused,
+)
 from repro.kernels.autotune import (
     default_block_config,
     get_cache,
     time_config,
 )
+
+# ResNet-20 CIFAR's dominant conv shape — the acceptance target for the
+# implicit path's traffic win (estimator, not wall clock: interpret mode
+# has no HBM counters)
+_RESNET20_CONV = ((8, 16, 32, 32), (16, 16, 3, 3))
+_MIN_IMPLICIT_BYTES_RATIO = 3.0
+
+
+def _gemm_bytes(M: int, K: int, N: int, bm: int = 128, bn: int = 128) -> int:
+    """Bytes-moved model of the fused GEMM: fp32 operands in, u8 codes
+    written + re-fetched per output-tile sweep, fp32 out."""
+    bm, bn = min(bm, M), min(bn, N)
+    return (4 * (M * K + K * N)          # fp32 operands read by quantizers
+            + 2 * (M * K + K * N)        # codes written, then first fetch
+            + (M * K * (N // bn - 1) + K * N * (M // bm - 1))  # re-fetches
+            + 4 * M * N)                 # fp32 output
+
+
+def _entry_bytes(entry, config=None) -> int | None:
+    """``peak_hbm_bytes`` estimate for a registry row (None when the
+    entry's traffic has no model — nothing currently lacks one)."""
+    spec = entry.tune
+    bm = config.block_m if config is not None else 128
+    bn = config.block_n if config is not None else 128
+    if entry.name == "lowbit_conv_fused":
+        geom = conv_geometry((2, 16, 8, 8), (16, 16, 3, 3), (1, 1), "SAME")
+        return im2col_conv_bytes(geom, 32)["total"]
+    if entry.name == "lowbit_conv_implicit":
+        geom = conv_geometry((2, 16, 8, 8), (16, 16, 3, 3), (1, 1), "SAME")
+        if config is not None and config.impl == "im2col":
+            return im2col_conv_bytes(geom, 36, block_m=bm,
+                                     block_n=bn)["total"]
+        bh = config.block_m if config is not None else None
+        bn_ = config.block_n if config is not None else None
+        return implicit_conv_bytes(geom, 36, bh=bh, block_n=bn_)["total"]
+    if spec is not None and spec.kind == "gemm":
+        M, K, N = spec.shape
+        return _gemm_bytes(M, K, N, bm, bn)
+    if spec is not None and spec.kind == "quantize":
+        M, K = spec.shape
+        return 4 * M * K + M * K  # fp32 in, u8 codes out
+    return None
 
 
 def _time(f, *args, n=5):
@@ -42,18 +93,25 @@ def _time(f, *args, n=5):
     return best * 1e6
 
 
-def _row(name, us, derived, config=None, tuned=None, cached=None):
-    r = {"name": name, "us_per_call": round(us, 1), "derived": derived}
+def _row(name, us, derived, config=None, tuned=None, cached=None,
+         hbm_bytes=None):
+    r = {"name": name, "derived": derived}
+    if us is not None:
+        r["us_per_call"] = round(us, 1)
     if config is not None:
         r["blocks"] = {
             "block_m": config.block_m, "block_n": config.block_n,
             "k_block": config.k_block,
         }
+        if getattr(config, "impl", ""):
+            r["blocks"]["impl"] = config.impl
         r["grouping"] = config.grouping
     if tuned is not None:
         r["tuned"] = tuned
     if cached is not None:
         r["cached"] = cached
+    if hbm_bytes is not None:
+        r["peak_hbm_bytes"] = int(hbm_bytes)
     return r
 
 
@@ -75,10 +133,53 @@ def _tuned_rows(entry, cache):
         us_tuned, tuned_cfg = time_config(spec, winner, n=5), winner
     return [
         _row(f"{base}_default", us_default, "interpret-mode",
-             config=default_cfg, tuned=False),
+             config=default_cfg, tuned=False,
+             hbm_bytes=_entry_bytes(entry, default_cfg)),
         _row(f"{base}_tuned", us_tuned, "interpret-mode",
-             config=tuned_cfg, tuned=True, cached=winner is not None),
+             config=tuned_cfg, tuned=True, cached=winner is not None,
+             hbm_bytes=_entry_bytes(entry, tuned_cfg)),
     ]
+
+
+def _conv_impl_rows(quick: bool):
+    """im2col-vs-implicit comparison: timed on the quick registry shape,
+    estimator-only on the ResNet-20 CIFAR shape (the acceptance target —
+    asserted, so the perf trail cannot silently regress the traffic win)."""
+    rows = []
+    shapes = [("2x16x8x8_o16k3", (2, 16, 8, 8), (16, 16, 3, 3), True)]
+    xs, ws = _RESNET20_CONV
+    tag = f"resnet20_{'x'.join(str(d) for d in xs)}_o{ws[0]}k3"
+    shapes.append((tag, xs, ws, not quick))
+    for tag, xshape, wshape, timed in shapes:
+        geom = conv_geometry(xshape, wshape, (1, 1), "SAME")
+        est = {
+            "im2col": im2col_conv_bytes(geom, 36)["total"],
+            "implicit": implicit_conv_bytes(geom, 36)["total"],
+        }
+        ratio = est["im2col"] / est["implicit"]
+        assert ratio >= _MIN_IMPLICIT_BYTES_RATIO, (
+            f"implicit conv must move >= {_MIN_IMPLICIT_BYTES_RATIO}x fewer "
+            f"HBM bytes than im2col on {tag}: got {ratio:.2f}x"
+        )
+        for impl in ("im2col", "implicit"):
+            us = None
+            if timed:
+                cfg = QuantConfig(fmt=FMT_IMAGENET, stochastic=False,
+                                  backend="pallas", k_block=36,
+                                  conv_impl=impl)
+                x = jax.random.normal(jax.random.key(4), xshape)
+                w = jax.random.normal(jax.random.key(5), wshape) * 0.1
+                us = _time(
+                    jax.jit(lambda a, b, c=cfg: lowbit_conv_fused(
+                        a, b, None, (1, 1), "SAME", c)),
+                    x, w,
+                )
+            r = _row(f"kernel/conv_{impl}_{tag}", us,
+                     "interpret-mode" if timed else "bytes-model only",
+                     hbm_bytes=est[impl])
+            r["im2col_over_implicit_bytes"] = round(ratio, 2)
+            rows.append(r)
+    return rows
 
 
 def run(quick: bool = True):
@@ -95,19 +196,23 @@ def run(quick: bool = True):
         args = entry.concrete_args()
         us = _time(jax.jit(fn), *args)
         rows.append(_row(f"kernel/{entry.name}_{entry.bench_tag}", us,
-                         "interpret-mode"))
+                         "interpret-mode", hbm_bytes=_entry_bytes(entry)))
         if entry.tune is not None:
             rows += _tuned_rows(entry, cache)
+
+    rows += _conv_impl_rows(quick)
 
     # hand-coded XLA reference rows (not Pallas kernels, so not registered)
     x = jax.random.normal(jax.random.key(0), (256, 512))
     w = jax.random.normal(jax.random.key(1), (512, 256)) * 0.05
     cfg = QuantConfig(fmt=FMT_IMAGENET, stochastic=False)
+    fp32_io = 4 * (x.size + w.size + x.shape[0] * w.shape[1])
     us = _time(jax.jit(lambda a, b: lowbit_matmul(a, b, None, cfg)), x, w)
     rows.append(_row("kernel/lowbit_matmul_fakequant_jit", us,
-                     "XLA-fused reference"))
+                     "XLA-fused reference", hbm_bytes=fp32_io))
     us = _time(jax.jit(lambda a, b: a @ b), x, w)
-    rows.append(_row("kernel/fp32_matmul_jit", us, "baseline"))
+    rows.append(_row("kernel/fp32_matmul_jit", us, "baseline",
+                     hbm_bytes=fp32_io))
 
     # conv backends: fake-quant XLA reference (+ a bigger Pallas shape with
     # --full; the quick Pallas conv row is the registry's example shape)
@@ -129,8 +234,11 @@ def run(quick: bool = True):
         jax.jit(lambda a, b: lowbit_conv(a, b, None, (1, 1), "SAME", cfg)),
         xc, wc,
     )
-    rows.append(_row(f"kernel/lowbit_conv_fakequant_jit_{tag}", us,
-                     "XLA-fused reference"))
+    geom = conv_geometry(xc.shape, wc.shape, (1, 1), "SAME")
+    rows.append(_row(
+        f"kernel/lowbit_conv_fakequant_jit_{tag}", us,
+        "XLA-fused reference",
+        hbm_bytes=4 * (xc.size + wc.size + geom.m0 * geom.o)))
     return rows
 
 
@@ -143,8 +251,9 @@ def main() -> None:
     args = ap.parse_args()
     rows = run(quick=not args.full)
     for r in rows:
-        print(f'{r["name"]},{r["us_per_call"]:.1f},"{r["derived"]}"',
-              flush=True)
+        us = r.get("us_per_call")
+        print(f'{r["name"]},{"" if us is None else f"{us:.1f}"},'
+              f'"{r["derived"]}"', flush=True)
     if args.json:
         payload = {
             "suite": "kernel_bench",

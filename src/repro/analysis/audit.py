@@ -24,8 +24,9 @@ stale or missing a registry tuning spec:
 ``--sabotage MODE`` plants a negative control that must make the gate
 fail (exercised by the regression tests): ``fp32_gemm`` (an fp32 GEMM on
 the train hot path), ``overlap_write`` (a kernel whose output index map
-writes one block from conflicting grid steps), or ``deep_k`` (a
-contraction tile whose integer accumulator exceeds 24 bits).
+writes one block from conflicting grid steps), ``deep_k`` (a contraction
+tile whose integer accumulator exceeds 24 bits), or ``drop_halo`` (an
+implicit-conv window grid whose halo band is one row short of its taps).
 """
 from __future__ import annotations
 
@@ -104,7 +105,7 @@ def build_report(
             SEED_CACHE_PATH, TuneCache, check_cache)
 
         kernel_sabotage = sabotage if sabotage in (
-            "overlap_write", "deep_k") else None
+            "overlap_write", "deep_k", "drop_halo") else None
         report["kernels"] = run_kernel_audit(sabotage=kernel_sabotage)
         # Tuning-cache staleness: the committed seed cache must cover every
         # registry tuning spec and every seeded winner must still prove
@@ -200,10 +201,12 @@ def main(argv=None) -> int:
                          "KERNEL_REGISTRY")
     ap.add_argument("--kernels-baseline", default=str(_KERNELS_BASELINE))
     ap.add_argument("--sabotage", nargs="?", const="fp32_gemm", default=None,
-                    choices=["fp32_gemm", "overlap_write", "deep_k"],
+                    choices=["fp32_gemm", "overlap_write", "deep_k",
+                             "drop_halo"],
                     help="plant a negative control the gate must fail: an "
                          "fp32 GEMM on the train hot path, an overlapping "
-                         "output index map, or a >24-bit contraction tile")
+                         "output index map, a >24-bit contraction tile, or "
+                         "an implicit-conv halo band one row short")
     args = ap.parse_args(argv)
 
     _force_host_devices(2)

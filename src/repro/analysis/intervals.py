@@ -667,6 +667,19 @@ class _Interp:
             "rsqrt": lambda: Interval(0.0, _INF, False),
             "sqrt": lambda: Interval(0.0, _INF, False),
         }
+        if prim == "rem":
+            a, b = iv[0], iv[1]
+            ca, cb = a.concrete, b.concrete
+            if ca is not None and cb is not None and cb != 0:
+                return AbsVal.const(float(math.fmod(ca, cb)))
+            if a.integer and b.integer and a.lo >= 0 and b.lo >= 1 \
+                    and b.bounded:
+                # truncated remainder of nonneg by positive: [0, b.hi - 1],
+                # and never larger than the dividend itself
+                return AbsVal.of(Interval(
+                    0.0, min(a.hi, b.hi - 1.0) if a.bounded else b.hi - 1.0,
+                    True))
+            return AbsVal.of(Interval.top())
         if prim in ("eq", "ne", "lt", "le", "gt", "ge"):
             c0, c1 = iv[0].concrete, iv[1].concrete
             if c0 is not None and c1 is not None:

@@ -58,10 +58,12 @@ __all__ = [
     "Violation",
     "find_pallas_eqns",
     "prove_matmul_accumulation_bits",
+    "prove_window_grid",
     "run_kernel_audit",
     "verify_candidate",
     "verify_closed_jaxpr",
     "verify_entry",
+    "verify_implicit_conv_candidate",
     "verify_quantize_candidate",
 ]
 
@@ -70,7 +72,7 @@ _MAX_GRID_POINTS = 1 << 18  # full index-map enumeration cap
 _MAX_STEP_REPLAYS = 2048    # abstract body replays over used grid axes
 _MAX_UNUSED_REPLAYS = 8     # unused-axis subgrid replays before fixpoint gate
 
-SABOTAGE_MODES = ("overlap_write", "deep_k")
+SABOTAGE_MODES = ("overlap_write", "deep_k", "drop_halo")
 
 
 # ---------------------------------------------------------------------------
@@ -519,6 +521,171 @@ def verify_quantize_candidate(
         cj, f"qcandidate_{M}x{K}_{fmt}_kb{k_block}_bm{block_m}_{grouping}")
 
 
+def prove_window_grid(
+    geom, bh: int, cb: int, block_n: int, *,
+    band_h_override: int | None = None,
+) -> tuple[list[Violation], dict]:
+    """Coverage proof for the implicit-GEMM conv's halo'd window grid.
+
+    The implicit kernel's activation BlockSpec fetches whole images — the
+    actual patch addressing is the in-kernel halo-band load plus static
+    strided tap slices, which the generic index-map enumeration cannot see.
+    This replays that address arithmetic over the full grid and proves:
+
+    * every halo band ``[row0, row0 + band_h)`` stays inside the padded
+      input and contains every tap row its ``bh`` output rows need,
+    * every ``(image, output_row)`` pair is produced by exactly one M-tile
+      and every input channel by exactly one K-tile (no gaps, no overlaps),
+    * tap column slices stay inside the padded width.
+
+    ``band_h_override`` exists for the ``drop_halo`` negative control —
+    shrinking the band must surface an ``oob`` violation here.
+    """
+    viols: list[Violation] = []
+    cov: dict = {}
+    oh, ow, kh, kw = geom.oh, geom.ow, geom.kh, geom.kw
+    sh, sw, hp, wp = geom.sh, geom.sw, geom.hp, geom.wp
+    for cond, msg in (
+        (bh >= 1 and oh % bh == 0, f"bh={bh} must divide OH={oh}"),
+        (cb >= 1 and geom.c % cb == 0, f"cb={cb} must divide C={geom.c}"),
+        (block_n >= 1, f"block_n={block_n} must be positive"),
+    ):
+        if not cond:
+            viols.append(Violation("divisibility", "window_grid", msg))
+    if viols:
+        return viols, cov
+    band_h = sh * (bh - 1) + kh if band_h_override is None \
+        else band_h_override
+    oh_tiles, n_k = oh // bh, geom.c // cb
+    m_tiles = geom.m0 // (bh * ow)
+    rows_covered: dict[tuple[int, int], int] = {}
+    for i in range(m_tiles):
+        img, rt = divmod(i, oh_tiles)
+        row0 = rt * bh * sh
+        if img >= geom.n:
+            viols.append(Violation(
+                "oob", "window_grid",
+                f"M-tile {i} addresses image {img} >= N={geom.n}"))
+            break
+        if row0 < 0 or row0 + band_h > hp:
+            viols.append(Violation(
+                "oob", "window_grid",
+                f"M-tile {i}: halo band rows [{row0}, {row0 + band_h}) "
+                f"outside padded input height {hp}"))
+            break
+        bad = next(
+            ((r, kh_) for r in range(bh) for kh_ in range(kh)
+             if kh_ + sh * r >= band_h), None)
+        if bad is not None:
+            r, kh_ = bad
+            viols.append(Violation(
+                "oob", "window_grid",
+                f"M-tile {i}: output row {rt * bh + r} tap {kh_} needs "
+                f"band row {kh_ + sh * r} >= band_h={band_h} — halo band "
+                f"too short"))
+            break
+        for r in range(bh):
+            key = (img, rt * bh + r)
+            rows_covered[key] = rows_covered.get(key, 0) + 1
+    if kw + sw * (ow - 1) > wp:
+        viols.append(Violation(
+            "oob", "window_grid",
+            f"tap column slice spans {kw + sw * (ow - 1)} > padded width "
+            f"{wp}"))
+    if not any(v.kind == "oob" for v in viols):
+        want = {(n_, r_) for n_ in range(geom.n) for r_ in range(oh)}
+        missing = sorted(want - set(rows_covered))
+        dup = sorted(k for k, v in rows_covered.items() if v > 1)
+        if missing:
+            viols.append(Violation(
+                "gap", "window_grid",
+                f"{len(missing)} of {len(want)} (image, output_row) pairs "
+                f"never produced, e.g. {missing[0]}"))
+        if dup:
+            viols.append(Violation(
+                "overlap", "window_grid",
+                f"(image, output_row) {dup[0]} produced by multiple "
+                f"M-tiles"))
+        chans = [c_ for k in range(n_k) for c_ in range(k * cb, k * cb + cb)]
+        if sorted(chans) != list(range(geom.c)) or any(
+                c_ >= geom.c for c_ in chans):
+            viols.append(Violation(
+                "gap", "window_grid",
+                f"K-tiles cover channels {sorted(set(chans))[:4]}... "
+                f"instead of 0..{geom.c - 1} exactly once"))
+    cov = {
+        "output_blocks": geom.n * oh,
+        "blocks_written": len(rows_covered),
+        "band_h": band_h,
+        "m_tiles": m_tiles,
+        "k_tiles": n_k,
+    }
+    return viols, cov
+
+
+def verify_implicit_conv_candidate(
+    geom, fmt: EMFormat, k_block: int, bh: int, block_n: int,
+    grouping: str = "nc", gs_fmt: EMFormat = GS_FMT_DEFAULT,
+) -> KernelReport:
+    """Legality oracle for an implicit-GEMM conv tiling candidate.
+
+    Combines the generic pallas proofs (trace
+    :func:`repro.kernels.implicit_conv.implicit_conv_forward` and prove
+    every ``pallas_call``: BlockSpec coverage + the 2^24 accumulator
+    budget over the fused quantize+GEMM body) with the window-grid proof
+    of :func:`prove_window_grid`, which covers the in-kernel halo
+    addressing the BlockSpec enumeration cannot see.
+    """
+    from repro.kernels.implicit_conv import implicit_compatible, \
+        implicit_conv_forward
+
+    name = (f"iconv_{'x'.join(str(d) for d in geom.as_dims())}"
+            f"_{fmt}_kb{k_block}_bh{bh}_bn{block_n}_{grouping}")
+    ok, reason = implicit_compatible(geom, k_block)
+    window_viols: list[Violation] = []
+    cov: dict = {}
+    if not ok:
+        window_viols.append(Violation("divisibility", "window_grid", reason))
+    else:
+        window_viols, cov = prove_window_grid(
+            geom, bh, k_block // geom.kk, block_n)
+    calls: list[CallReport] = [CallReport(
+        kernel=f"{name}#window", grid=(), violations=window_viols,
+        coverage={"window_grid": cov} if cov else {}, accumulations=[],
+        max_integer_bits=0, out_bounds={}, warnings=[], exhaustive=True,
+    )]
+    if not window_viols:
+        stride = (geom.sh, geom.sw)
+        padding = [(geom.ph_lo, geom.ph_hi), (geom.pw_lo, geom.pw_hi)]
+
+        def fn(x, w):
+            return implicit_conv_forward(
+                x, w, None, None, stride, padding, fmt=fmt, gs_fmt=gs_fmt,
+                k_block=k_block, bh=bh, block_n=block_n, grouping=grouping,
+                interpret=True,
+            )
+
+        try:
+            cj = jax.make_jaxpr(fn)(
+                jax.ShapeDtypeStruct(
+                    (geom.n, geom.c, geom.h, geom.w), jnp.float32),
+                jax.ShapeDtypeStruct(
+                    (geom.o, geom.c, geom.kh, geom.kw), jnp.float32),
+            )
+        except ValueError as e:
+            calls.append(CallReport(
+                kernel=f"{name}#trace", grid=(), coverage={},
+                accumulations=[], max_integer_bits=0, out_bounds={},
+                warnings=[], exhaustive=True,
+                violations=[Violation(
+                    "divisibility", "trace",
+                    f"kernel rejected the tiling: {e}")],
+            ))
+        else:
+            calls += verify_closed_jaxpr(cj, name).calls
+    return KernelReport(name=name, calls=calls)
+
+
 def prove_matmul_accumulation_bits(fmt: EMFormat, k_block: int) -> int:
     """Interval-prover bound on the GEMM's integer accumulator width for
     one ``(fmt, k_block)`` — must equal
@@ -620,9 +787,30 @@ def _sabotage_deep_k_jaxpr() -> jcore.ClosedJaxpr:
     )
 
 
+def _sabotage_drop_halo_report() -> KernelReport:
+    """The implicit conv's window grid with the last halo row dropped:
+    ``band_h - 1`` leaves the deepest tap of every M-tile's last output row
+    unreadable — the window proof must name the ``oob``."""
+    from repro.kernels.implicit_conv import conv_geometry
+
+    geom = conv_geometry((2, 4, 8, 8), (8, 4, 3, 3), (1, 1), "SAME")
+    bh, cb, bn = 2, 2, 8
+    band_h = geom.sh * (bh - 1) + geom.kh
+    viols, cov = prove_window_grid(
+        geom, bh, cb, bn, band_h_override=band_h - 1)
+    name = "sabotage:drop_halo"
+    return KernelReport(name=name, calls=[CallReport(
+        kernel=f"{name}#window", grid=(), violations=viols,
+        coverage={"window_grid": cov} if cov else {}, accumulations=[],
+        max_integer_bits=0, out_bounds={}, warnings=[], exhaustive=True,
+    )])
+
+
+# builders return either a ClosedJaxpr to verify or a finished KernelReport
 _SABOTAGE_BUILDERS = {
     "overlap_write": _sabotage_overlap_jaxpr,
     "deep_k": _sabotage_deep_k_jaxpr,
+    "drop_halo": _sabotage_drop_halo_report,
 }
 
 
@@ -635,9 +823,12 @@ def run_kernel_audit(sabotage: str | None = None) -> dict:
         name: verify_entry(entry) for name, entry in KERNEL_REGISTRY.items()
     }
     if sabotage is not None:
-        builder = _SABOTAGE_BUILDERS[sabotage]
+        built = _SABOTAGE_BUILDERS[sabotage]()
         name = f"sabotage:{sabotage}"
-        reports[name] = verify_closed_jaxpr(builder(), name)
+        if isinstance(built, KernelReport):
+            reports[name] = built
+        else:
+            reports[name] = verify_closed_jaxpr(built, name)
     return {
         "budget_bits": ACC_BUDGET_BITS,
         "ok": all(r.ok for r in reports.values()),

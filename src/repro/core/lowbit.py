@@ -70,9 +70,18 @@ class QuantConfig:
     pallas_interpret: bool | None = None
     # Pallas GEMM output tiles.  None = resolve per call-site shape through
     # the autotuner cache (kernels.autotune: explicit override > cache hit >
-    # proven-legal default); set to pin a tiling explicitly.
+    # proven-legal default); set to pin a tiling explicitly.  For the
+    # implicit conv, block_m is the M-tile in GEMM rows (must be bh*OW with
+    # bh | OH) and block_n the output-channel tile.
     block_m: int | None = None
     block_n: int | None = None
+    # Forward-conv lowering on the pallas backend: "im2col" materializes the
+    # patch matrix, "implicit" runs the fused implicit-GEMM kernel
+    # (kernels.implicit_conv; requires k_block = cb*kh*kw with cb | C), and
+    # "auto" resolves REPRO_CONV_IMPL env > tuned cache > implicit-when-
+    # legal.  Never changes quantization semantics: incompatible k_blocks
+    # stay on im2col, explicit "implicit" on one raises.
+    conv_impl: str = "auto"
 
     def __post_init__(self):
         if self.backend not in ("fake_quant", "pallas"):
@@ -84,6 +93,11 @@ class QuantConfig:
             raise ValueError(
                 f"QuantConfig.grouping must be one of 'nc'/'c'/'n'/'none', "
                 f"got {self.grouping!r}"
+            )
+        if self.conv_impl not in ("auto", "im2col", "implicit"):
+            raise ValueError(
+                f"QuantConfig.conv_impl must be 'auto', 'im2col' or "
+                f"'implicit', got {self.conv_impl!r}"
             )
         # Accumulator-exactness invariant (paper Sec. V-B / mls_matmul.py):
         # a scaling group sums k_block products of product_bits-wide integers

@@ -16,6 +16,15 @@
   (``REPRO_PALLAS_INTERPRET``)
 """
 from .autotune import BlockConfig, TuneSpec, resolve_block_config
+from .implicit_conv import (
+    ConvGeom,
+    conv_geometry,
+    im2col_conv_bytes,
+    implicit_compatible,
+    implicit_conv_bytes,
+    implicit_conv_forward,
+    resolve_conv_impl,
+)
 from .mls_quantize import mls_quantize_pallas
 from .mls_matmul import mls_matmul_pallas
 from .ops import lowbit_matmul_fused
@@ -40,6 +49,13 @@ __all__ = [
     "INTERPRET_ENV_VAR",
     "default_interpret",
     "resolve_interpret",
+    "ConvGeom",
+    "conv_geometry",
+    "im2col_conv_bytes",
+    "implicit_compatible",
+    "implicit_conv_bytes",
+    "implicit_conv_forward",
+    "resolve_conv_impl",
     "mls_quantize_pallas",
     "mls_matmul_pallas",
     "lowbit_matmul_fused",

@@ -6,8 +6,10 @@ shapes.  This module searches tiling candidates per *tuning key* —
 ``(kind, shape, <E,M> format, grouping)`` — and persists the winners:
 
 * **Candidates** are :class:`BlockConfig` points — ``(block_m, block_n,
-  k_block, grouping)`` for a GEMM, ``block_m`` for the quantizer —
-  enumerated by :func:`gemm_candidates` / :func:`quantize_candidates`.
+  k_block, grouping)`` for a GEMM, ``block_m`` for the quantizer,
+  ``(impl, bh, block_n)`` for a conv — enumerated by
+  :func:`gemm_candidates` / :func:`quantize_candidates` /
+  :func:`conv_candidates`.
 * **Pruning**: every candidate is first proven legal by the static verifier
   (:func:`repro.analysis.kernel_verify.verify_candidate`): grid coverage +
   the 2^24 integer-accumulation budget, from traced jaxpr metadata alone.
@@ -53,6 +55,7 @@ __all__ = [
     "DEFAULT_CACHE_PATH",
     "SEED_CACHE_PATH",
     "check_cache",
+    "conv_candidates",
     "default_block_config",
     "gemm_candidates",
     "get_cache",
@@ -82,22 +85,30 @@ class BlockConfig:
     ``block_m`` / ``block_n`` tile the GEMM output (``block_m`` doubles as
     the quantizer's row block); ``k_block`` is the contraction tile ==
     scaling-group width; ``grouping`` the group-scale layout the kernel
-    executes (``kernels.mls_matmul.sg_shapes``).
+    executes (``kernels.mls_matmul.sg_shapes``).  For ``"conv"`` specs,
+    ``impl`` selects the lowering (``"im2col"`` | ``"implicit"``); on the
+    implicit kernel ``block_m`` stores ``bh`` (output rows per M-tile, the
+    M-tile being ``bh*OW``).  Empty ``impl`` means "not a conv entry".
     """
 
     block_m: int
     block_n: int
     k_block: int
     grouping: str = "nc"
+    impl: str = ""
 
     def to_json(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if not self.impl:
+            d.pop("impl")  # keep pre-conv cache entries byte-stable
+        return d
 
     @classmethod
     def from_json(cls, d: dict) -> BlockConfig:
         return cls(
             block_m=int(d["block_m"]), block_n=int(d["block_n"]),
             k_block=int(d["k_block"]), grouping=str(d["grouping"]),
+            impl=str(d.get("impl", "")),
         )
 
     def replace(self, **kw) -> BlockConfig:
@@ -108,10 +119,12 @@ class BlockConfig:
 class TuneSpec:
     """One tunable workload: a GEMM or a quantizer call at a fixed shape.
 
-    ``kind`` is ``"gemm"`` (shape ``(M, K, N)``) or ``"quantize"``
-    (shape ``(M, K)``).  ``k_block`` is the *caller's* group width — the
-    search may try neighbours, but resolution pins it back when the caller
-    fixes numerics.
+    ``kind`` is ``"gemm"`` (shape ``(M, K, N)``), ``"quantize"``
+    (shape ``(M, K)``) or ``"conv"`` (shape = the 13 geometry dims of
+    ``implicit_conv.ConvGeom.as_dims()`` followed by ``k_block``, so the
+    cache key distinguishes group widths).  ``k_block`` is the *caller's*
+    group width — the gemm/quantize search may try neighbours, but conv
+    candidates keep it fixed because it *is* the numerics (``cb*kh*kw``).
     """
 
     kind: str
@@ -121,13 +134,17 @@ class TuneSpec:
     grouping: str = "nc"
 
     def __post_init__(self):
-        if self.kind not in ("gemm", "quantize"):
+        if self.kind not in ("gemm", "quantize", "conv"):
             raise ValueError(f"unknown TuneSpec kind {self.kind!r}")
-        want = 3 if self.kind == "gemm" else 2
+        want = {"gemm": 3, "quantize": 2, "conv": 14}[self.kind]
         if len(self.shape) != want:
             raise ValueError(
                 f"{self.kind} TuneSpec needs a rank-{want} shape, "
                 f"got {self.shape}")
+        if self.kind == "conv" and self.shape[13] != self.k_block:
+            raise ValueError(
+                "conv TuneSpec shape[13] must equal k_block, got "
+                f"{self.shape[13]} != {self.k_block}")
 
     def key(self) -> str:
         """The cache key: (kind, shape, format, grouping)."""
@@ -290,6 +307,9 @@ def default_block_config(
     budget for ``(fmt, k_block)`` is enforced where the config is built."""
     if spec is not None:
         k_block, grouping = spec.k_block, spec.grouping
+        if spec.kind == "conv":
+            # im2col at the shipped GEMM tiles: always legal, any k_block.
+            return BlockConfig(128, 128, k_block, grouping, impl="im2col")
     return BlockConfig(128, 128, k_block, grouping)
 
 
@@ -333,9 +353,38 @@ def quantize_candidates(spec: TuneSpec) -> list[BlockConfig]:
     return out
 
 
+def conv_candidates(spec: TuneSpec) -> list[BlockConfig]:
+    """Candidate conv lowerings: the im2col default plus implicit-GEMM
+    tilings when the layout is legal for ``spec.k_block``.
+
+    Unlike the GEMM search, ``k_block`` is held fixed — for convs it *is*
+    the scaling-group width (``cb * kh * kw``), i.e. the numerics.  For
+    implicit candidates ``block_m`` stores ``bh`` (output rows per M-tile).
+    """
+    from .implicit_conv import ConvGeom, implicit_compatible
+
+    geom = ConvGeom(*spec.shape[:13])
+    out = [default_block_config(spec)]
+    ok, _ = implicit_compatible(geom, spec.k_block)
+    if not ok:
+        return out
+    bhs = [b for b in range(1, geom.oh + 1)
+           if geom.oh % b == 0 and b * geom.ow <= 512]
+    bns = sorted({b for b in (32, 64, 128) if b <= max(geom.o, 32)})
+    for bh in bhs[-4:]:  # largest few row-tiles; tiny bh just adds grid steps
+        for bn in bns:
+            c = BlockConfig(bh, bn, spec.k_block, spec.grouping,
+                            impl="implicit")
+            if c not in out:
+                out.append(c)
+    return out
+
+
 def candidates_for(spec: TuneSpec) -> list[BlockConfig]:
     if spec.kind == "gemm":
         return gemm_candidates(spec)
+    if spec.kind == "conv":
+        return conv_candidates(spec)
     return quantize_candidates(spec)
 
 
@@ -353,6 +402,21 @@ def verify_config(spec: TuneSpec, config: BlockConfig):
         M, K, N = spec.shape
         return verify_candidate(
             (M, K, N), (spec.fmt, config.k_block),
+            (config.block_m, config.block_n), grouping=config.grouping,
+        )
+    if spec.kind == "conv":
+        from repro.analysis.kernel_verify import verify_implicit_conv_candidate
+        from .implicit_conv import ConvGeom
+
+        geom = ConvGeom(*spec.shape[:13])
+        if config.impl == "implicit":
+            return verify_implicit_conv_candidate(
+                geom, spec.fmt, config.k_block, config.block_m,
+                config.block_n, grouping=config.grouping,
+            )
+        # im2col lowers to the virtual GEMM — prove that.
+        return verify_candidate(
+            (geom.m0, geom.k0, geom.o), (spec.fmt, config.k_block),
             (config.block_m, config.block_n), grouping=config.grouping,
         )
     M, K = spec.shape
@@ -380,6 +444,35 @@ def time_config(spec: TuneSpec, config: BlockConfig, n: int = 3) -> float:
                 block_m=config.block_m, block_n=config.block_n,
                 grouping=config.grouping,
             )
+    elif spec.kind == "conv":
+        from repro.core.lowbit import QuantConfig
+        from .implicit_conv import ConvGeom
+        from .lowbit_conv import lowbit_conv_fused
+
+        geom = ConvGeom(*spec.shape[:13])
+        x = jax.random.normal(
+            jax.random.key(0), (geom.n, geom.c, geom.h, geom.w), jnp.float32)
+        w = jax.random.normal(
+            jax.random.key(1), (geom.o, geom.c, geom.kh, geom.kw),
+            jnp.float32) * 0.1
+        implicit = config.impl == "implicit"
+        cfg = QuantConfig(
+            fmt=spec.fmt, k_block=config.k_block, grouping=config.grouping,
+            stochastic=False, backend="pallas",
+            conv_impl="implicit" if implicit else "im2col",
+            # conv BlockConfigs store bh in block_m; the QuantConfig wants
+            # the M-tile in GEMM rows (bh * OW) on the implicit path.
+            block_m=config.block_m * geom.ow if implicit else config.block_m,
+            block_n=config.block_n,
+        )
+        stride = (geom.sh, geom.sw)
+        padding = [(geom.ph_lo, geom.ph_hi), (geom.pw_lo, geom.pw_hi)]
+
+        f = jax.jit(lambda a, b: lowbit_conv_fused(
+            a, b, None, stride=stride, padding=padding, cfg=cfg))
+
+        def fn():
+            return f(x, w)
     else:
         from .mls_quantize import mls_quantize_pallas
 

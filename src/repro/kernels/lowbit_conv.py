@@ -30,8 +30,21 @@ operands in the matmul analogue of the paper's Table IV layout ("nc" per
 group-scale layout.  Output tilings left unset on the config resolve
 through the autotuner cache (:mod:`repro.kernels.autotune`).
 
-Known scope limits (tracked in ROADMAP): im2col is materialized (a fused
-implicit-GEMM walk of the activation is the follow-up).
+The forward conv has two interchangeable lowerings on the pallas backend:
+``"im2col"`` (materialized patch matrix, any ``k_block``) and
+``"implicit"`` (:mod:`repro.kernels.implicit_conv`: a single fused kernel
+that walks the NCHW activation and quantizes in the GEMM prologue — no
+patch matrix, activations read from HBM once).  ``QuantConfig.conv_impl``
+/ the ``REPRO_CONV_IMPL`` env pick explicitly; ``"auto"`` resolves through
+the tuned cache and falls back to implicit-when-legal.  The implicit
+layout requires ``k_block = cb*kh*kw`` with ``cb | C`` (groups are whole
+channels' taps), so impl selection never changes quantization semantics.
+When it is active with ``grouping="none"`` and deterministic rounding,
+the weight-grad GEMM *reuses the forward activation codes*: tensor-wise
+quantization commutes with the patch gather, so the codes are gathered
+(1 byte/element) instead of re-quantizing the fp32 patch matrix.  Other
+groupings re-quantize because the wgrad contraction runs along the patch
+axis — a different group layout than the forward's.
 """
 from __future__ import annotations
 
@@ -44,6 +57,15 @@ import jax.numpy as jnp
 
 from repro.core.formats import EMFormat, GS_FMT_DEFAULT
 from repro.core.lowbit import QuantConfig, _maybe_key
+from .implicit_conv import (
+    conv_geometry,
+    covered_tensor_scale,
+    elementwise_codes,
+    implicit_conv_forward,
+    patches_u8,
+    resolve_conv_blocks,
+    resolve_conv_impl,
+)
 from .mls_matmul import mls_matmul_pallas
 from .mls_quantize import mls_quantize_pallas
 from .ref import mls_matmul_ref, quantize_ref
@@ -238,6 +260,16 @@ def _gemm_kwargs(cfg: QuantConfig, backend: QDBackend):
 
 def _conv_fwd_impl(x, w, key, stride, padding, cfg, backend):
     o = w.shape[0]
+    if backend is PALLAS_BACKEND:
+        geom = conv_geometry(x.shape, w.shape, stride, padding)
+        if resolve_conv_impl(geom, cfg) == "implicit":
+            bh, bn = resolve_conv_blocks(geom, cfg)
+            return implicit_conv_forward(
+                x, w, _maybe_key(key, cfg, 0), _maybe_key(key, cfg, 1),
+                stride, padding, fmt=cfg.fmt, gs_fmt=cfg.gs_fmt,
+                k_block=cfg.k_block, bh=bh, block_n=bn,
+                grouping=cfg.grouping, interpret=_interpret(cfg),
+            )
     cols, (n, oh, ow) = _im2col(x, w.shape[2:], stride, padding)
     wmat = w.reshape(o, -1).T.astype(jnp.float32)  # (C*kh*kw, O)
     y2d = qd_gemm(
@@ -247,17 +279,73 @@ def _conv_fwd_impl(x, w, key, stride, padding, cfg, backend):
     return y2d.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
 
 
+def _qd_gemm_precoded_x(
+    xc: jax.Array, x_st: jax.Array, w2d: jax.Array, key_w, *, fmt, gs_fmt,
+    k_block, block_m, block_n, interpret,
+):
+    """`qd_gemm` with the x operand already in u8 codes (tensor-wise
+    scale ``x_st``, grouping "none") — the forward-code-reuse wgrad path.
+    Padding/quantize/matmul mirror `qd_gemm` exactly, so the result is
+    bit-identical to re-quantizing the fp32 operand with grouping "none"
+    and deterministic rounding."""
+    M, K = xc.shape
+    K2, N = w2d.shape
+    assert K == K2, (xc.shape, w2d.shape)
+    if block_m is None or block_n is None:
+        from .autotune import resolve_block_config  # lazy: avoids a cycle
+
+        bc = resolve_block_config(
+            "gemm", (M, K, N), fmt, "none",
+            k_block=k_block, block_m=block_m, block_n=block_n,
+        )
+        block_m, block_n = bc.block_m, bc.block_n
+    xcp = _pad_to(xc, block_m, k_block)  # zero codes decode to 0 — exact
+    wp = _pad_to(w2d.astype(jnp.float32), k_block, block_n)
+    wc, wsgT, wst = _pallas_quantize(
+        wp.T, fmt, k_block, gs_fmt, key_w, block_n, "none", interpret
+    )
+    ones = jnp.ones((1, 1), jnp.float32)
+    y = _pallas_matmul(
+        xcp, ones, x_st, wc.T, wsgT.T, wst, fmt, k_block, block_m, block_n,
+        "none", interpret,
+    )
+    return y[:M, :N]
+
+
 def _conv_bwd_impl(x, w, g, key, stride, padding, cfg, backend):
     o = w.shape[0]
     ksize = w.shape[2:]
-    cols, (n, oh, ow) = _im2col(x, ksize, stride, padding)
+    geom = conv_geometry(x.shape, w.shape, stride, padding)
+    n, oh, ow = geom.n, geom.oh, geom.ow
     e2d = g.transpose(0, 2, 3, 1).reshape(-1, o).astype(jnp.float32)
     wmat = w.reshape(o, -1).astype(jnp.float32)  # (O, C*kh*kw)
     kw = _gemm_kwargs(cfg, backend)
     # G = Cols(qA)^T @ qE: contraction over the N*OH*OW patches (Alg. 1 l.13)
-    dwmat = qd_gemm(
-        cols.T, e2d, _maybe_key(key, cfg, 2), _maybe_key(key, cfg, 3), **kw
-    )  # (C*kh*kw, O)
+    reuse_codes = (
+        backend is PALLAS_BACKEND
+        and cfg.grouping == "none"
+        and _maybe_key(key, cfg, 2) is None
+        and resolve_conv_impl(geom, cfg) == "implicit"
+    )
+    if reuse_codes:
+        # Tensor-wise quantization commutes with the patch gather, so the
+        # forward activation codes are gathered as u8 instead of
+        # re-quantizing the fp32 patch matrix (bit-identical to qd_gemm on
+        # cols.T with grouping "none" + nearest rounding).
+        s_t, xp = covered_tensor_scale(x, geom)
+        colsT_codes = patches_u8(elementwise_codes(xp, s_t, cfg.fmt), geom).T
+        dwmat = _qd_gemm_precoded_x(
+            colsT_codes, s_t, e2d, _maybe_key(key, cfg, 3),
+            fmt=cfg.fmt, gs_fmt=cfg.gs_fmt, k_block=cfg.k_block,
+            block_m=cfg.block_m, block_n=cfg.block_n,
+            interpret=_interpret(cfg),
+        )
+    else:
+        cols, _ = _im2col(x, ksize, stride, padding)
+        dwmat = qd_gemm(
+            cols.T, e2d, _maybe_key(key, cfg, 2), _maybe_key(key, cfg, 3),
+            **kw,
+        )  # (C*kh*kw, O)
     dw = dwmat.T.reshape(w.shape)
     # dA = qE @ qW^T: contraction over output channels, then col2im + STE
     dcols = qd_gemm(

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.core.formats import FMT_IMAGENET
 from repro.core.lowbit import QuantConfig
 from .autotune import TuneSpec
+from .implicit_conv import conv_geometry, conv_tune_dims
 from .lowbit_conv import lowbit_conv_fused, lowbit_matmul_qd
 from .mls_matmul import mls_matmul_pallas
 from .mls_quantize import mls_quantize_pallas
@@ -137,6 +138,25 @@ def _build_conv_fused():
                 jax.ShapeDtypeStruct((16, 16, 3, 3), _F32))
 
 
+def _implicit_conv_cfg() -> QuantConfig:
+    # k_block = cb*kh*kw = 4*3*3: legal implicit grouping for C=16 3x3 convs
+    return QuantConfig(fmt=FMT_IMAGENET, stochastic=False, backend="pallas",
+                       k_block=36, conv_impl="implicit",
+                       pallas_interpret=True)
+
+
+def _build_conv_implicit():
+    cfg = _implicit_conv_cfg()
+
+    def fn(x, w):
+        return lowbit_conv_fused(x, w, None, (1, 1), "SAME", cfg)
+    return fn, (jax.ShapeDtypeStruct((2, 16, 8, 8), _F32),
+                jax.ShapeDtypeStruct((16, 16, 3, 3), _F32))
+
+
+_ICONV_GEOM = conv_geometry((2, 16, 8, 8), (16, 16, 3, 3), (1, 1), "SAME")
+
+
 def _build_matmul_qd():
     cfg = _conv_cfg()
 
@@ -181,6 +201,18 @@ KERNEL_REGISTRY: dict[str, KernelEntry] = {
             # the forward im2col GEMM of the example shape:
             # (N*OH*OW, C*kh*kw, O) = (2*8*8, 16*3*3, 16) at k_block=32
             tune=TuneSpec("gemm", (128, 144, 16), FMT_IMAGENET, 32),
+        ),
+        KernelEntry(
+            name="lowbit_conv_implicit",
+            description="implicit-GEMM conv, quantize fused into the GEMM "
+                        "prologue (no materialized im2col)",
+            build=_build_conv_implicit,
+            needs_grad=True,
+            bench_tag="2x16x8x8_o16k3",
+            # conv specs key on the full geometry + k_block; the tuner
+            # races im2col against implicit tilings at fixed numerics
+            tune=TuneSpec("conv", conv_tune_dims(_ICONV_GEOM, 36),
+                          FMT_IMAGENET, 36),
         ),
         KernelEntry(
             name="lowbit_matmul_qd",

@@ -1,0 +1,251 @@
+"""Implicit-GEMM fused conv kernel: bit-exactness vs the im2col reference
+pipeline, impl resolution precedence, the window-grid verifier hooks, the
+conv autotuning plumbing, and the HBM bytes-moved model.
+
+Property tests use hypothesis when installed, else the local shim.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig
+from repro.core.formats import FMT_CIFAR, FMT_IMAGENET, GS_FMT_DEFAULT
+from repro.kernels.autotune import TuneSpec, conv_candidates
+from repro.kernels.implicit_conv import (
+    conv_geometry,
+    conv_tune_dims,
+    default_conv_blocks,
+    im2col_conv_bytes,
+    implicit_compatible,
+    implicit_conv_bytes,
+    implicit_conv_forward,
+    resolve_conv_impl,
+)
+from repro.kernels.lowbit_conv import (
+    _im2col,
+    _ref_quantize,
+    conv_fused_grads_ref,
+    lowbit_conv_fused,
+    lowbit_conv_fused_ref,
+)
+
+# C=4, 3x3 taps, cb=2 whole channels per group: the smallest non-trivial
+# legal implicit grouping (k_block = 2*3*3 = 18)
+_C, _K, _KB, _O = 4, 3, 18, 6
+
+
+def _cfg(**kw):
+    base = dict(fmt=FMT_IMAGENET, k_block=_KB, grouping="nc",
+                stochastic=False, backend="pallas", pallas_interpret=True,
+                conv_impl="implicit", block_n=8)
+    base.update(kw)
+    return QuantConfig(**base)
+
+
+def _conv_data(h, w, seed, n=2):
+    kx, kw_, kg = jax.random.split(jax.random.key(seed), 3)
+    x = jax.random.normal(kx, (n, _C, h, w), jnp.float32)
+    wt = jax.random.normal(kw_, (_O, _C, _K, _K), jnp.float32) * 0.3
+    return x, wt, kg
+
+
+# ---------------------------------------------------------------------------
+# property: implicit path bit-identical to the reference backend over
+# stride x padding x ragged spatial shapes (codes, scales, y, both grads)
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(st.integers(5, 9), st.integers(4, 8), st.sampled_from([1, 2]),
+       st.sampled_from(["SAME", "VALID", "explicit"]),
+       st.integers(0, 2**31 - 1))
+def test_implicit_bit_identical_to_ref(h, w, s, pad_kind, seed):
+    pad = [(2, 2), (2, 2)] if pad_kind == "explicit" else pad_kind
+    geom = conv_geometry((2, _C, h, w), (_O, _C, _K, _K), (s, s), pad)
+    if geom.oh < 1 or geom.ow < 1:
+        return  # empty output window: nothing to compare
+    x, wt, kg = _conv_data(h, w, seed)
+    cfg = _cfg()
+    y = lowbit_conv_fused(x, wt, None, stride=(s, s), padding=pad, cfg=cfg)
+    yr = lowbit_conv_fused_ref(x, wt, None, stride=(s, s), padding=pad,
+                               cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+    e = jax.random.normal(kg, y.shape, jnp.float32)
+
+    def loss(a, b):
+        out = lowbit_conv_fused(a, b, None, stride=(s, s), padding=pad,
+                                cfg=cfg)
+        return jnp.sum(out * e)
+
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, wt)
+    dxr, dwr = conv_fused_grads_ref(x, wt, e, None, stride=(s, s),
+                                    padding=pad, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(dx), np.asarray(dxr))
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dwr))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(5, 8), st.sampled_from([1, 2]),
+       st.sampled_from(["SAME", "VALID"]), st.integers(0, 2**31 - 1))
+def test_implicit_codes_and_scales_match_im2col_quantizer(h, s, pad, seed):
+    """The fused prologue's emitted codes, group scales, and tensor scale
+    equal quantizing the materialized im2col matrix (paper Alg. 2)."""
+    geom = conv_geometry((2, _C, h, h), (_O, _C, _K, _K), (s, s), pad)
+    if geom.oh < 1 or geom.ow < 1:
+        return
+    x, wt, _ = _conv_data(h, h, seed)
+    fmt = FMT_CIFAR if seed % 2 else FMT_IMAGENET
+    _, codes, sg, st_ = implicit_conv_forward(
+        x, wt, None, None, (s, s), pad, fmt=fmt, k_block=_KB,
+        block_n=8, grouping="nc", interpret=True, emit_codes=True)
+    cols, _ = _im2col(x, (_K, _K), (s, s), pad)
+    bm = default_conv_blocks(geom)[0] * geom.ow
+    rc, rsg, rst = _ref_quantize(cols, fmt, _KB, GS_FMT_DEFAULT, None,
+                                 block_m=bm, grouping="nc", interpret=False)
+    np.testing.assert_array_equal(np.asarray(st_), np.asarray(rst))
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(sg), np.asarray(rsg))
+
+
+@pytest.mark.parametrize("grouping", ["nc", "c", "n", "none"])
+def test_all_groupings_bit_identical(grouping):
+    x, wt, kg = _conv_data(9, 7, 3)
+    cfg = _cfg(grouping=grouping)
+    y = lowbit_conv_fused(x, wt, None, stride=(1, 1), padding="SAME",
+                          cfg=cfg)
+    yr = lowbit_conv_fused_ref(x, wt, None, stride=(1, 1), padding="SAME",
+                               cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    e = jax.random.normal(kg, y.shape, jnp.float32)
+    dx, dw = jax.grad(
+        lambda a, b: jnp.sum(lowbit_conv_fused(
+            a, b, None, stride=(1, 1), padding="SAME", cfg=cfg) * e),
+        argnums=(0, 1))(x, wt)
+    dxr, dwr = conv_fused_grads_ref(x, wt, e, None, stride=(1, 1),
+                                    padding="SAME", cfg=cfg)
+    # grouping "none" exercises the wgrad forward-code-reuse fast path
+    np.testing.assert_array_equal(np.asarray(dx), np.asarray(dxr))
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dwr))
+
+
+def test_stochastic_forward_bit_identical():
+    x, wt, _ = _conv_data(8, 8, 5)
+    # ref tiles (block_m=64=OH*OW... bm divides M0=128, kb | K0) line up
+    # with the virtual GEMM, so the r-draws agree bit-for-bit
+    cfg = _cfg(stochastic=True, block_m=64)
+    key = jax.random.key(7)
+    y = lowbit_conv_fused(x, wt, key, stride=(1, 1), padding="SAME",
+                          cfg=cfg)
+    yr = lowbit_conv_fused_ref(x, wt, key, stride=(1, 1), padding="SAME",
+                               cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+# ---------------------------------------------------------------------------
+# impl resolution: env > cfg > tuned cache > legality default
+# ---------------------------------------------------------------------------
+def test_resolve_impl_auto_falls_back_on_incompatible_k_block():
+    geom = conv_geometry((2, _C, 8, 8), (_O, _C, 3, 3), (1, 1), "SAME")
+    ok, reason = implicit_compatible(geom, 32)
+    assert not ok and "not a multiple" in reason
+    assert resolve_conv_impl(geom, _cfg(conv_impl="auto", k_block=32,
+                                        block_n=None)) == "im2col"
+    assert resolve_conv_impl(geom, _cfg(k_block=18)) == "implicit"
+
+
+def test_resolve_impl_explicit_implicit_raises_on_incompatible():
+    geom = conv_geometry((2, _C, 8, 8), (_O, _C, 3, 3), (1, 1), "SAME")
+    with pytest.raises(ValueError, match="not legal"):
+        resolve_conv_impl(geom, _cfg(conv_impl="implicit", k_block=32,
+                                     block_n=None))
+
+
+def test_resolve_impl_env_overrides_cfg(monkeypatch):
+    geom = conv_geometry((2, _C, 8, 8), (_O, _C, 3, 3), (1, 1), "SAME")
+    monkeypatch.setenv("REPRO_CONV_IMPL", "im2col")
+    assert resolve_conv_impl(geom, _cfg(conv_impl="implicit")) == "im2col"
+    monkeypatch.setenv("REPRO_CONV_IMPL", "bogus")
+    with pytest.raises(ValueError, match="REPRO_CONV_IMPL"):
+        resolve_conv_impl(geom, _cfg())
+
+
+def test_quant_config_rejects_unknown_conv_impl():
+    with pytest.raises(ValueError, match="conv_impl"):
+        _cfg(conv_impl="winograd")
+
+
+def test_impl_choice_never_changes_numerics():
+    """A/B: forcing im2col and implicit on the same legal config produces
+    bit-identical outputs — impl selection is pure layout."""
+    x, wt, _ = _conv_data(8, 8, 11)
+    ya = lowbit_conv_fused(x, wt, None, stride=(1, 1), padding="SAME",
+                           cfg=_cfg(conv_impl="implicit"))
+    yb = lowbit_conv_fused(x, wt, None, stride=(1, 1), padding="SAME",
+                           cfg=_cfg(conv_impl="im2col"))
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
+
+
+# ---------------------------------------------------------------------------
+# conv autotuning plumbing
+# ---------------------------------------------------------------------------
+def test_conv_candidates_keep_k_block_fixed():
+    geom = conv_geometry((2, 16, 8, 8), (16, 16, 3, 3), (1, 1), "SAME")
+    spec = TuneSpec("conv", conv_tune_dims(geom, 36), FMT_IMAGENET,
+                    k_block=36)
+    cands = conv_candidates(spec)
+    assert cands[0].impl == "im2col"
+    impls = {c.impl for c in cands}
+    assert impls == {"im2col", "implicit"}
+    # k_block is the scaling-group width: the conv search must never move it
+    assert all(c.k_block == 36 for c in cands)
+    for c in cands:
+        if c.impl == "implicit":
+            assert geom.oh % c.block_m == 0  # block_m stores bh for convs
+
+
+def test_conv_spec_shape_must_embed_k_block():
+    geom = conv_geometry((2, 16, 8, 8), (16, 16, 3, 3), (1, 1), "SAME")
+    with pytest.raises(ValueError, match="shape\\[13\\]"):
+        TuneSpec("conv", conv_tune_dims(geom, 36), FMT_IMAGENET, k_block=72)
+
+
+def test_verify_implicit_conv_candidate_proves_and_rejects():
+    from repro.analysis.kernel_verify import verify_implicit_conv_candidate
+
+    geom = conv_geometry((2, 16, 8, 8), (16, 16, 3, 3), (1, 1), "SAME")
+    good = verify_implicit_conv_candidate(geom, FMT_IMAGENET, 36, 2, 16)
+    assert good.ok and good.max_integer_bits < 24
+    # bh that does not divide OH must be named, not silently padded
+    bad = verify_implicit_conv_candidate(geom, FMT_IMAGENET, 36, 3, 16)
+    assert not bad.ok
+    assert "divisibility" in {v.kind for v in bad.violations}
+
+
+def test_window_proof_drop_halo_is_oob():
+    from repro.analysis.kernel_verify import prove_window_grid
+
+    geom = conv_geometry((2, _C, 8, 8), (_O, _C, 3, 3), (1, 1), "SAME")
+    clean, cov = prove_window_grid(geom, 2, 2, 8)
+    assert not clean and cov["blocks_written"] == geom.n * geom.oh
+    short, _ = prove_window_grid(geom, 2, 2, 8, band_h_override=3)
+    assert any(v.kind == "oob" for v in short)
+
+
+# ---------------------------------------------------------------------------
+# HBM bytes-moved model (the acceptance target)
+# ---------------------------------------------------------------------------
+def test_implicit_moves_3x_fewer_bytes_on_resnet20_shape():
+    geom = conv_geometry((8, 16, 32, 32), (16, 16, 3, 3), (1, 1), "SAME")
+    im = im2col_conv_bytes(geom, 36)
+    imp = implicit_conv_bytes(geom, 36)
+    assert im["total"] / imp["total"] >= 3.0
+    # the im2col gap is the patch matrix: kh*kw-fold fp32 duplication
+    assert im["im2col_materialize"] > imp["total"]
+    # the kernel reads each image exactly once
+    assert imp["kernel_x_fetch"] == 4 * geom.n * geom.c * geom.hp * geom.wp

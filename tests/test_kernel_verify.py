@@ -42,6 +42,7 @@ EXPECTED_KERNELS = {
     "mls_matmul_pallas",
     "lowbit_matmul_fused",
     "lowbit_conv_fused",
+    "lowbit_conv_implicit",
     "lowbit_matmul_qd",
 }
 
@@ -94,7 +95,18 @@ def test_sabotage_deep_k_names_overflow():
     assert rep.max_integer_bits == accumulation_bits(FMT_IMAGENET, 2048) == 25
 
 
-@pytest.mark.parametrize("mode", ["overlap_write", "deep_k"])
+def test_sabotage_drop_halo_names_oob():
+    from repro.analysis.kernel_verify import _sabotage_drop_halo_report
+
+    rep = _sabotage_drop_halo_report()
+    assert not rep.ok
+    kinds = {v.kind for v in rep.violations}
+    assert "oob" in kinds, kinds
+    # the violation names the short halo band, not a generic bound error
+    assert any("halo band" in v.detail for v in rep.violations)
+
+
+@pytest.mark.parametrize("mode", ["overlap_write", "deep_k", "drop_halo"])
 def test_audit_gate_trips_on_sabotage(mode, tmp_path):
     out = tmp_path / f"report_{mode}.json"
     rc = audit.main([
