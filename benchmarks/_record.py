@@ -1,0 +1,17 @@
+"""Shared ``BENCH_*.json`` row emission for the benchmark scripts.
+
+The canonical implementation lives in :mod:`repro.sweep.record` (so the
+installed package stamps artifacts without needing the ``benchmarks/``
+directory on ``sys.path``); this shim is the script-side import point.
+Every payload and every row is stamped with ``schema_version`` +
+``git_sha`` so nightly artifacts are comparable across commits.
+"""
+from repro.sweep.record import (  # noqa: F401
+    SCHEMA_VERSION,
+    git_sha,
+    make_payload,
+    stamp_rows,
+    write_json,
+)
+
+__all__ = ["SCHEMA_VERSION", "git_sha", "make_payload", "stamp_rows", "write_json"]

@@ -18,11 +18,14 @@ artifact for the CI perf trail::
     PYTHONPATH=src python benchmarks/kernel_bench.py --json BENCH_kernels.json
 """
 import argparse
-import json
-import platform
 import time
 
 import jax
+
+try:
+    from benchmarks._record import make_payload, write_json
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from _record import make_payload, write_json
 
 from repro.core import FMT_IMAGENET, QuantConfig, lowbit_conv, lowbit_matmul
 from repro.kernels import (
@@ -255,17 +258,8 @@ def main() -> None:
         print(f'{r["name"]},{"" if us is None else f"{us:.1f}"},'
               f'"{r["derived"]}"', flush=True)
     if args.json:
-        payload = {
-            "suite": "kernel_bench",
-            "unix_time": time.time(),
-            "backend": jax.default_backend(),
-            "machine": platform.machine(),
-            "quick": not args.full,
-            "rows": rows,
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"wrote {args.json}")
+        write_json(args.json, make_payload("kernel_bench", rows,
+                                           quick=not args.full))
 
 
 if __name__ == "__main__":

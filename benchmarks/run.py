@@ -4,8 +4,12 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract).  ``--full`` runs
 the longer training-proxy settings.
 """
 import argparse
+import pathlib
 import sys
 import traceback
+
+if __package__ in (None, ""):  # script mode: `python benchmarks/run.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 from benchmarks import (
     fig7_are,
@@ -30,29 +34,40 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--only", default=None,
+                    help=f"run one module: {', '.join(n for n, _ in MODULES)}")
+    args = ap.parse_args(argv)
+    known = [n for n, _ in MODULES]
+    if args.only and args.only not in known:
+        # a typo must not silently run nothing and exit green
+        print(f"--only {args.only!r} is not a benchmark module; "
+              f"have: {', '.join(known)}", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
-    ok = True
+    failed: list[str] = []
     for name, mod in MODULES:
         if args.only and args.only != name:
             continue
         try:
             for row in mod.run(quick=not args.full):
-                if isinstance(row, dict):  # rich rows (kernel_bench)
-                    print(f'{row["name"]},{row["us_per_call"]:.1f},'
-                          f'"{row["derived"]}"', flush=True)
+                if isinstance(row, dict):  # rich rows (kernel_bench/table2)
+                    us = row.get("us_per_call")  # bytes-model rows carry none
+                    us_s = f"{us:.1f}" if us is not None else ""
+                    print(f'{row["name"]},{us_s},"{row["derived"]}"',
+                          flush=True)
                 else:
                     row_name, us, derived = row
                     print(f'{row_name},{us:.1f},"{derived}"', flush=True)
         except Exception:  # noqa: BLE001
-            ok = False
+            failed.append(name)
             traceback.print_exc()
             print(f'{name}/FAILED,0,"see stderr"', flush=True)
-    if not ok:
+    if failed:
+        # explicit propagation: the job fails and names the failing modules
+        print(f"FAILED modules: {', '.join(failed)}", file=sys.stderr)
         sys.exit(1)
 
 

@@ -2,67 +2,75 @@
 synthetic CIFAR under fp32 / MLS<2,4> / MLS<2,1> / fixed-point(Ex=0) and
 compare loss+accuracy trajectories.  The paper's claim at full scale:
 <2,1> keeps CIFAR accuracy within 1%; pure fixed-point at the same mantissa
-widths degrades or diverges."""
-import time
+widths degrades or diverges.
 
-import jax
-import jax.numpy as jnp
+The variants are frontier-sweep cells (``repro.sweep``) pinned to this
+table's historical proxy shape (ResNet-20, hw=16, batch=32), so the table
+and the nightly sweep can never disagree about what a cell trains.
+Standalone, it writes a stamped JSON artifact for the CI perf trail::
 
-from repro.core import EMFormat, FMT_CIFAR, FMT_IMAGENET, QuantConfig
-from repro.data import make_cifar_iterator
-from repro.models.cnn import CNNConfig, apply_cnn, init_cnn
-from repro.optim import sgdm_init, sgdm_update
+    PYTHONPATH=src python benchmarks/table2_accuracy.py --json BENCH_table2.json
+"""
+import argparse
 
+try:
+    from benchmarks._record import make_payload, write_json
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from _record import make_payload, write_json
+
+from repro.sweep.grid import Cell
+from repro.sweep.runner import run_cell
+
+# name -> Cell kwargs on top of the Table II proxy shape
 VARIANTS = {
-    "fp32": None,
-    "mls_e2m4": QuantConfig(fmt=FMT_IMAGENET),
-    "mls_e2m1": QuantConfig(fmt=FMT_CIFAR),
-    "fix_e0m4": QuantConfig(fmt=EMFormat(0, 4)),  # no elem exponent
-    "nogroup_e2m1": QuantConfig(fmt=FMT_CIFAR, grouping="none"),
+    "fp32": {"fmt": "fp32"},
+    "mls_e2m4": {"fmt": "mls_e2m4"},
+    "mls_e2m1": {"fmt": "mls_e2m1"},
+    "fix_e0m4": {"fmt": "fix_e0m4"},
+    "nogroup_e2m1": {"fmt": "mls_e2m1", "grouping": "none"},
 }
-
-
-def _train(qcfg, steps, seed=0):
-    cfg = CNNConfig(arch="resnet20", num_classes=10, width_mult=0.25, in_hw=16)
-    params = init_cnn(jax.random.key(seed), cfg)
-    opt = sgdm_init(params)
-    nxt, ds = make_cifar_iterator(batch=32, hw=16, seed=seed)
-
-    @jax.jit
-    def step(params, opt, batch, i):
-        def loss_fn(p):
-            logits = apply_cnn(p, batch["image"], cfg, qcfg,
-                               jax.random.fold_in(jax.random.key(1), i))
-            ll = jax.nn.log_softmax(logits)
-            loss = -jnp.take_along_axis(ll, batch["label"][:, None], 1).mean()
-            acc = (logits.argmax(-1) == batch["label"]).mean()
-            return loss, acc
-
-        (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
-        params, opt = sgdm_update(g, opt, params, lr=0.05)
-        return params, opt, l, a
-
-    accs, losses = [], []
-    for i in range(steps):
-        batch, ds = nxt(ds)
-        params, opt, l, a = step(params, opt, batch, jnp.int32(i))
-        losses.append(float(l))
-        accs.append(float(a))
-    k = max(1, len(accs) // 5)
-    return sum(losses[-k:]) / k, sum(accs[-k:]) / k
 
 
 def run(quick: bool = True):
     steps = 40 if quick else 300
     rows = []
     base_acc = None
-    for name, qcfg in VARIANTS.items():
-        t0 = time.perf_counter()
-        loss, acc = _train(qcfg, steps)
-        us = (time.perf_counter() - t0) * 1e6 / steps
+    for name, kw in VARIANTS.items():
+        cell = Cell(arch="resnet20", batch=32, hw=16, width=0.25,
+                    steps=steps, **kw)
+        r = run_cell(cell)
+        acc, loss = r["final_acc"], r["final_loss"]
         if name == "fp32":
             base_acc = acc
         drop = (base_acc - acc) if base_acc is not None else 0.0
-        rows.append((f"table2/{name}", us,
-                     f"loss={loss:.3f} acc={acc:.3f} drop={drop:+.3f}"))
+        loss_s = "nan" if loss is None else f"{loss:.3f}"
+        rows.append({
+            "name": f"table2/{name}",
+            "us_per_call": round(r["wall_time_s"] * 1e6 / steps, 1),
+            "derived": f"loss={loss_s} acc={acc:.3f} drop={drop:+.3f}",
+            "config_hash": r["config_hash"],
+            "final_loss": loss,
+            "final_acc": acc,
+            "diverged": r["diverged"],
+            "steps": steps,
+        })
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="300-step proxy (the nightly setting)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows as a BENCH_*.json artifact")
+    args = ap.parse_args()
+    rows = run(quick=not args.full)
+    for r in rows:
+        print(f'{r["name"]},{r["us_per_call"]:.1f},"{r["derived"]}"', flush=True)
+    if args.json:
+        write_json(args.json, make_payload("table2_accuracy", rows,
+                                           quick=not args.full))
+
+
+if __name__ == "__main__":
+    main()

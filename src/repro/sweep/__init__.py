@@ -1,0 +1,35 @@
+"""Bit-width × architecture frontier sweep (ROADMAP scenario-diversity item).
+
+Drives short convergence-proxy training runs over a declarative grid of
+``(<E,M> format × grouping × backend) × architecture`` cells — the paper's
+Tables II–IV accuracy/bit-width trade-off surface extended beyond CNNs to
+the transformer/Mamba2/MoE low-bit paths — and emits one structured
+``BENCH_accuracy.json`` row per cell.  A trend gate compares the run
+against the committed baseline (``sweep/baselines/accuracy.json``) with
+per-cell tolerances so convergence regressions fail CI instead of staying
+anecdotal::
+
+    PYTHONPATH=src python -m repro.sweep --smoke --gate
+
+See :mod:`repro.sweep.grid` for the cell schema, :mod:`repro.sweep.gate`
+for the tolerance semantics and :mod:`repro.sweep.report` for the markdown
+frontier table written to ``$GITHUB_STEP_SUMMARY`` by CI.
+"""
+from .gate import apply_gate, load_baseline, sabotage_baseline
+from .grid import FORMATS, Cell, expand_grid, full_grid, smoke_grid
+from .report import frontier_table
+from .runner import run_cell, run_cells
+
+__all__ = [
+    "FORMATS",
+    "Cell",
+    "apply_gate",
+    "expand_grid",
+    "frontier_table",
+    "full_grid",
+    "load_baseline",
+    "run_cell",
+    "run_cells",
+    "sabotage_baseline",
+    "smoke_grid",
+]

@@ -1,0 +1,72 @@
+"""``BENCH_*.json`` emission: one schema, every artifact, every commit.
+
+Nightly CI trends ``BENCH_*.json`` artifacts across commits, which only
+works if every producer (kernel bench, accuracy tables, the frontier
+sweep) stamps rows identically.  This module is the single implementation;
+``benchmarks/_record.py`` re-exports it for the script-side producers.
+
+Every payload and every row carries ``schema_version`` and ``git_sha``
+(``GITHUB_SHA`` in CI, ``git rev-parse`` locally, ``"unknown"`` outside a
+checkout) so two artifacts are comparable without trusting filenames.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import subprocess
+import time
+
+import jax
+
+__all__ = ["SCHEMA_VERSION", "git_sha", "make_payload", "stamp_rows", "write_json"]
+
+SCHEMA_VERSION = 1
+
+
+def git_sha() -> str:
+    """Current commit SHA: CI env var first, then git, else "unknown"."""
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            check=True, timeout=10,
+        ).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def stamp_rows(rows: list[dict], sha: str | None = None) -> list[dict]:
+    """Stamp ``schema_version`` + ``git_sha`` into every row, in place."""
+    sha = sha or git_sha()
+    for r in rows:
+        r.setdefault("schema_version", SCHEMA_VERSION)
+        r.setdefault("git_sha", sha)
+    return rows
+
+
+def make_payload(suite: str, rows: list[dict], *, quick: bool | None = None,
+                 extra: dict | None = None) -> dict:
+    """The common artifact envelope around stamped rows."""
+    payload = {
+        "suite": suite,
+        "schema_version": SCHEMA_VERSION,
+        "git_sha": git_sha(),
+        "unix_time": time.time(),
+        "backend": jax.default_backend(),
+        "machine": platform.machine(),
+    }
+    if quick is not None:
+        payload["quick"] = quick
+    if extra:
+        payload.update(extra)
+    payload["rows"] = stamp_rows(rows, sha=payload["git_sha"])
+    return payload
+
+
+def write_json(path: str, payload: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")

@@ -1,0 +1,312 @@
+"""Frontier sweep subsystem: grid expansion/dedup, config-hash stability,
+gate semantics against planted regressions, sabotage negative controls,
+smoke determinism and the CLI exit-code contract."""
+import copy
+import json
+
+import pytest
+
+from repro.sweep import __main__ as sweep_cli
+from repro.sweep.gate import (
+    apply_gate,
+    build_baseline,
+    sabotage_baseline,
+)
+from repro.sweep.grid import FORMATS, Cell, expand_grid, full_grid, smoke_grid
+from repro.sweep.report import frontier_table
+from repro.sweep.runner import run_cell
+
+
+# ---------------------------------------------------------------------------
+# grid expansion / dedup / hashing
+# ---------------------------------------------------------------------------
+def test_expand_grid_cartesian_product():
+    cells = expand_grid([
+        {"arch": ["resnet20"], "fmt": ["fp32", "mls_e2m1"],
+         "backend": ["fake_quant", "pallas"], "steps": 4},
+    ])
+    assert len(cells) == 4
+    assert {(c.fmt, c.backend) for c in cells} == {
+        ("fp32", "fake_quant"), ("fp32", "pallas"),
+        ("mls_e2m1", "fake_quant"), ("mls_e2m1", "pallas"),
+    }
+
+
+def test_expand_grid_dedups_overlapping_blocks():
+    block = {"arch": "resnet20", "fmt": "mls_e2m1", "steps": 4}
+    cells = expand_grid([block, dict(block), {**block, "envelope_acc": 0.5}])
+    # the third block differs only in a gate tolerance -> same math, deduped
+    assert len(cells) == 1
+
+
+def test_config_hash_stable_and_semantic():
+    c = Cell(arch="resnet20", fmt="mls_e2m1", steps=4)
+    # committed-stability check: baselines key on this digest, so a silent
+    # change to the hash domain must show up as a test failure
+    assert c.config_hash() == Cell(arch="resnet20", fmt="mls_e2m1",
+                                   steps=4).config_hash()
+    assert c.config_hash() != Cell(arch="resnet20", fmt="mls_e2m4",
+                                   steps=4).config_hash()
+    assert c.config_hash() != Cell(arch="resnet20", fmt="mls_e2m1",
+                                   steps=5).config_hash()
+    # tolerances are gate config, not math: hash-invariant
+    assert c.config_hash() == Cell(arch="resnet20", fmt="mls_e2m1", steps=4,
+                                   envelope_acc=0.1).config_hash()
+
+
+def test_cell_validation():
+    with pytest.raises(ValueError):
+        Cell(arch="resnet20", fmt="bf16")
+    with pytest.raises(ValueError):
+        Cell(arch="alexnet", fmt="fp32")
+    with pytest.raises(ValueError):
+        Cell(arch="resnet20", fmt="fp32", backend="cuda")
+
+
+def test_smoke_grid_meets_acceptance_floor():
+    """ISSUE acceptance: >= 12 cells, >= 3 formats x >= 3 archs, both
+    backends; hashes unique by construction."""
+    cells = smoke_grid()
+    assert len(cells) >= 12
+    assert len({c.fmt for c in cells}) >= 3
+    assert len({c.arch for c in cells}) >= 3
+    assert {c.backend for c in cells} == {"fake_quant", "pallas"}
+    hashes = [c.config_hash() for c in cells]
+    assert len(hashes) == len(set(hashes))
+
+
+def test_full_grid_superset_axes():
+    cells = full_grid()
+    assert {c.backend for c in cells} == {"fake_quant", "pallas"}
+    assert "none" in {c.grouping for c in cells}  # Table IV ablation axis
+    assert len({c.fmt for c in cells}) >= 4
+
+
+def test_grids_have_fp32_reference_for_envelopes():
+    for name, cells in (("smoke", smoke_grid()), ("full", full_grid())):
+        rows = [{"arch": c.arch, "fmt": c.fmt, "backend": c.backend,
+                 "grouping": c.grouping} for c in cells]
+        for c in cells:
+            if c.envelope_acc is None and c.envelope_loss is None:
+                continue
+            assert any(r["arch"] == c.arch and r["fmt"] == "fp32"
+                       and r["backend"] == "fake_quant" for r in rows), \
+                (name, c.cell_id())
+
+
+# ---------------------------------------------------------------------------
+# gate semantics (no training: synthetic rows)
+# ---------------------------------------------------------------------------
+def _mk_row(cell_id="resnet20/mls_e2m1/fake_quant", h="abc123", loss=1.0,
+            acc=0.6, diverged=False, **extra):
+    arch, fmt, backend = cell_id.split("/")[:3]
+    row = {"name": f"sweep/{cell_id}", "cell_id": cell_id, "config_hash": h,
+           "arch": arch, "fmt": fmt, "backend": backend, "grouping": "nc",
+           "steps": 4, "final_loss": loss, "final_acc": acc,
+           "diverged": diverged, "wall_time_s": 1.0}
+    row.update(extra)
+    return row
+
+
+def _mk_baseline(rows, grid="smoke"):
+    return build_baseline(rows, grid)
+
+
+def test_gate_passes_on_identical_run():
+    rows = [_mk_row(), _mk_row("transformer/fp32/fake_quant", "def456",
+                               loss=6.0, acc=None)]
+    assert apply_gate(rows, _mk_baseline(rows), grid_name="smoke") == []
+
+
+def test_gate_fails_on_planted_loss_regression():
+    rows = [_mk_row(loss=1.0)]
+    base = _mk_baseline(rows)
+    regressed = [_mk_row(loss=1.6)]  # > 1.0 + default tol 0.25
+    fails = apply_gate(regressed, base, grid_name="smoke")
+    assert len(fails) == 1 and "final_loss" in fails[0]
+
+
+def test_gate_fails_on_planted_acc_regression():
+    rows = [_mk_row(acc=0.8)]
+    fails = apply_gate([_mk_row(acc=0.5)], _mk_baseline(rows),
+                       grid_name="smoke")
+    assert len(fails) == 1 and "final_acc" in fails[0]
+
+
+def test_gate_respects_per_cell_tolerance_override():
+    rows = [_mk_row(loss=1.0)]
+    base = _mk_baseline(rows)
+    base["cells"]["abc123"]["loss_tol"] = 1.0
+    assert apply_gate([_mk_row(loss=1.6)], base, grid_name="smoke") == []
+
+
+def test_gate_fails_on_new_divergence_but_allows_known():
+    healthy = [_mk_row()]
+    fails = apply_gate([_mk_row(diverged=True)], _mk_baseline(healthy),
+                       grid_name="smoke")
+    assert len(fails) == 1 and "diverged" in fails[0]
+    # a cell blessed as diverged (fixed point Ex=0) may stay diverged
+    known_bad = [_mk_row(diverged=True)]
+    assert apply_gate(known_bad, _mk_baseline(known_bad),
+                      grid_name="smoke") == []
+
+
+def test_gate_fails_on_unknown_and_missing_cells():
+    rows = [_mk_row()]
+    base = _mk_baseline(rows)
+    unknown = [_mk_row(h="fresh999")]
+    fails = apply_gate(unknown, base, grid_name="smoke")
+    assert any("not in baseline" in f for f in fails)
+    assert any("missing from the run" in f for f in fails)
+    # partial (--only) runs skip the reverse-coverage check
+    assert not any("missing from the run" in f
+                   for f in apply_gate(unknown, base, grid_name=None))
+
+
+def test_gate_envelope_against_same_run_fp32():
+    fp32 = _mk_row("resnet20/fp32/fake_quant", "f32f32", loss=0.5, acc=0.9)
+    ok = _mk_row(loss=1.0, acc=0.75, envelope_acc=0.2)
+    bad = _mk_row(loss=1.0, acc=0.65, envelope_acc=0.2)
+    base = _mk_baseline([fp32, ok])
+    assert apply_gate([fp32, ok], base, grid_name="smoke") == []
+    base_bad = _mk_baseline([fp32, bad])
+    fails = apply_gate([fp32, bad], base_bad, grid_name="smoke")
+    assert len(fails) == 1 and "envelope" in fails[0]
+
+
+def test_sabotage_modes_fail_a_healthy_run():
+    rows = [_mk_row(), _mk_row("transformer/fp32/fake_quant", "def456",
+                               loss=6.0, acc=None)]
+    base = _mk_baseline(rows)
+    assert apply_gate(rows, base, grid_name="smoke") == []
+    for mode in ("regress", "missing_cell"):
+        sab = sabotage_baseline(base, mode)
+        assert apply_gate(rows, sab, grid_name="smoke"), mode
+    with pytest.raises(ValueError):
+        sabotage_baseline(base, "nope")
+    # sabotage never mutates the real baseline in place
+    assert apply_gate(rows, base, grid_name="smoke") == []
+
+
+def test_build_baseline_merges_grids_and_drops_stale():
+    smoke_rows = [_mk_row(h="aaa"), _mk_row(h="bbb")]
+    base = build_baseline(smoke_rows, "smoke")
+    base = build_baseline([_mk_row(h="bbb"), _mk_row(h="ccc")], "full", base)
+    assert set(base["cells"]) == {"aaa", "bbb", "ccc"}
+    assert base["cells"]["bbb"]["grids"] == ["full", "smoke"]
+    # re-blessing smoke without "aaa" drops it
+    base = build_baseline([_mk_row(h="bbb")], "smoke", base)
+    assert "aaa" not in base["cells"]
+    assert base["cells"]["ccc"]["grids"] == ["full"]
+
+
+def test_committed_baseline_covers_both_grids():
+    """The committed baseline must bless exactly the committed grids."""
+    from repro.sweep.gate import load_baseline
+    base = load_baseline()
+    assert base["schema_version"] == 1
+    for name, cells in (("smoke", smoke_grid()), ("full", full_grid())):
+        for c in cells:
+            entry = base["cells"].get(c.config_hash())
+            assert entry is not None, (name, c.cell_id())
+            assert name in entry["grids"], (name, c.cell_id())
+
+
+# ---------------------------------------------------------------------------
+# runner determinism (one real tiny cell, trained twice)
+# ---------------------------------------------------------------------------
+def test_smoke_cell_deterministic_under_seeds():
+    cell = Cell(arch="resnet20", fmt="mls_e2m1", steps=3, batch=4, hw=8)
+    r1, r2 = run_cell(cell), run_cell(cell)
+    assert r1["final_loss"] == r2["final_loss"]
+    assert r1["final_acc"] == r2["final_acc"]
+    assert r1["config_hash"] == r2["config_hash"]
+    assert not r1["diverged"]
+
+
+# ---------------------------------------------------------------------------
+# report + CLI
+# ---------------------------------------------------------------------------
+def test_frontier_table_pivot():
+    rows = [_mk_row(), _mk_row("resnet20/fp32/fake_quant", "f32f32",
+                               loss=0.5, acc=0.9),
+            _mk_row("mamba2/mls_e2m4/pallas", "mmm111", loss=6.0, acc=None,
+                    diverged=True)]
+    md = frontier_table(rows)
+    assert "| resnet20 | fake_quant |" in md
+    assert "acc 0.600" in md and "acc 0.900" in md
+    assert "**DIVERGED**" in md
+    # every swept format that appears gets a column
+    assert "`mls_e2m1`" in md and "`mls_e2m4`" in md
+    assert all(f in FORMATS for f in ("fp32", "mls_e2m1"))
+
+
+def test_cli_gate_exit_codes(tmp_path):
+    rows = [_mk_row()]
+    base = _mk_baseline(rows)
+    bpath = tmp_path / "baseline.json"
+    bpath.write_text(json.dumps(base))
+    payload = {"suite": "frontier_sweep", "grid": "smoke", "rows": rows}
+    rpath = tmp_path / "BENCH_accuracy.json"
+    rpath.write_text(json.dumps(payload))
+
+    assert sweep_cli.main(["--gate", "--from", str(rpath),
+                           "--baseline", str(bpath)]) == 0
+    assert sweep_cli.main(["--gate", "--sabotage", "--from", str(rpath),
+                           "--baseline", str(bpath)]) == 1
+    # regression in the rows themselves
+    bad = copy.deepcopy(payload)
+    bad["rows"][0]["final_loss"] = 9.0
+    bad["rows"][0]["diverged"] = True
+    rbad = tmp_path / "bad.json"
+    rbad.write_text(json.dumps(bad))
+    assert sweep_cli.main(["--gate", "--from", str(rbad),
+                           "--baseline", str(bpath)]) == 1
+    # without --gate the same failures only report (exit 0)
+    assert sweep_cli.main(["--from", str(rbad), "--baseline", str(bpath)]) == 0
+
+
+def test_cli_only_validation_and_list(capsys):
+    assert sweep_cli.main(["--smoke", "--only", "definitely-not-a-cell",
+                           "--list"]) == 2
+    assert "matches no cell" in capsys.readouterr().err
+    assert sweep_cli.main(["--smoke", "--list"]) == 0
+    out = capsys.readouterr().out
+    assert "resnet20/mls_e2m1/fake_quant" in out
+
+
+def test_cli_update_baseline_refuses_partial_and_sabotage(tmp_path, capsys):
+    rows = [_mk_row()]
+    payload = {"suite": "frontier_sweep", "grid": "smoke", "rows": rows}
+    rpath = tmp_path / "rows.json"
+    rpath.write_text(json.dumps(payload))
+    bpath = tmp_path / "b.json"
+    assert sweep_cli.main(["--from", str(rpath), "--sabotage",
+                           "--update-baseline",
+                           "--baseline", str(bpath)]) == 2
+    assert sweep_cli.main(["--from", str(rpath), "--update-baseline",
+                           "--baseline", str(bpath)]) == 0
+    assert json.loads(bpath.read_text())["cells"]["abc123"]["final_loss"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# benchmarks satellites: run.py --only validation, _record stamping
+# ---------------------------------------------------------------------------
+def test_bench_run_only_validation():
+    from benchmarks import run as bench_run
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["--only", "tabel2"])  # typo must not run-nothing-green
+    assert exc.value.code == 2
+
+
+def test_record_stamps_schema_and_sha():
+    from repro.sweep.record import SCHEMA_VERSION, make_payload
+    payload = make_payload("test_suite", [{"name": "a"}, {"name": "b"}],
+                           quick=True, extra={"grid": "smoke"})
+    assert payload["suite"] == "test_suite"
+    assert payload["schema_version"] == SCHEMA_VERSION
+    assert payload["grid"] == "smoke"
+    assert isinstance(payload["git_sha"], str) and payload["git_sha"]
+    for row in payload["rows"]:
+        assert row["schema_version"] == SCHEMA_VERSION
+        assert row["git_sha"] == payload["git_sha"]
